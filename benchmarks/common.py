@@ -1,0 +1,22 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (jit-warmed, synchronised)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> dict:
+    return {"name": name, "us_per_call": seconds * 1e6, "derived": derived}

@@ -1,0 +1,81 @@
+"""Render the EXPERIMENTS.md roofline table from dry-run JSON results.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table \
+        results/dryrun_baseline.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.3g}µs"
+    if x < 1:
+        return f"{x * 1e3:.3g}ms"
+    return f"{x:.3g}s"
+
+
+def fix_note(rec) -> str:
+    """What would move the dominant term down — wording reflects the §Perf
+    evidence (confirmed levers only; refuted hypotheses excluded)."""
+    b = rec["bottleneck"]
+    arch, shape = rec["arch"], rec["shape"]
+    moe = arch in ("dbrx_132b", "deepseek_v2_lite_16b")
+    if moe:
+        return "shard_map relational MoE plan (confirmed 3.3-3.8x, §Perf)"
+    if "rwkv" in arch or "zamba" in arch:
+        return "fused VMEM-resident state kernel (rwkv6_scan pattern)"
+    if b == "memory":
+        if shape == "prefill_32k":
+            return "Pallas flash kernel: score blocks never reach HBM"
+        if shape.startswith("decode") or shape == "long_500k":
+            return "bf16/quantized weight+cache reads; fused decode kernel"
+        return "drop full-remat recompute (+grad-accum to fit, -20-25%)"
+    if b == "collective":
+        return "fewer activation psums: fuse row-parallel pairs; " \
+               "remat=none removes recompute psums (-25%)"
+    return "near compute roof: raise arithmetic intensity per block"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "results/dryrun_baseline.json"
+    with open(path) as f:
+        recs = json.load(f)
+    single = [r for r in recs if r["mesh"] == "16x16"]
+    multi = {(r["arch"], r["shape"]): r for r in recs
+             if r["mesh"] == "2x16x16"}
+    print("| arch | shape | compute | memory | collective | bottleneck |"
+          " useful FLOP ratio | roofline frac | multi-pod | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in single:
+        key = (r["arch"], r["shape"])
+        mp = multi.get(key, {}).get("status", "—")
+        mp = "ok" if mp == "ok" else mp
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — |"
+                  f" {r['status']} | — | — | {mp} | — |")
+            continue
+        t = r["terms_s"]
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute'])} |"
+              f" {fmt_s(t['memory'])} | {fmt_s(t['collective'])} |"
+              f" {r['bottleneck']} | {r['useful_flop_ratio']:.3f} |"
+              f" {r['roofline_fraction']:.4f} | {mp} | {fix_note(r)} |")
+    # summary of per-device memory
+    print("\n| arch | shape | args GiB/dev | temp GiB/dev | aliased GiB |")
+    print("|---|---|---|---|---|")
+    for r in single:
+        if r["status"] != "ok":
+            continue
+        b = r["bytes_per_device"]
+        print(f"| {r['arch']} | {r['shape']} |"
+              f" {b['arguments'] / 2**30:.2f} | {b['temp'] / 2**30:.2f} |"
+              f" {b['aliased'] / 2**30:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

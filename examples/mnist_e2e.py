@@ -1,0 +1,50 @@
+"""The paper's MNIST image-classification benchmark, end to end (§6.3).
+
+Trains the one-hidden-layer network on MNIST-shaped data at a chosen batch
+size on both representations, then measures inference throughput — the
+workload of the paper's Figures 9 and 10 — and reports accuracy (the paper
+evaluates runtime/memory; accuracy here just proves learning happens).
+
+    PYTHONPATH=src python examples/mnist_e2e.py --batch 1000 --hidden 20
+"""
+import argparse
+import time
+
+import jax.numpy as jnp
+
+from repro.core import Engine, nn2sql
+from repro.data import make_mnist_like, one_hot_labels
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=1000)
+    ap.add_argument("--hidden", type=int, default=20)
+    ap.add_argument("--epochs", type=int, default=30)
+    args = ap.parse_args()
+
+    x, y = make_mnist_like(args.batch)
+    y_oh = jnp.asarray(one_hot_labels(y, 10))
+    spec = nn2sql.MLPSpec(args.batch, 784, args.hidden, 10, lr=0.1)
+    g = nn2sql.build_graph(spec)
+    w0 = nn2sql.init_weights(spec)
+
+    for kind in ("dense", "relational"):
+        eng = Engine(kind)
+        t0 = time.perf_counter()
+        wf, _ = nn2sql.train(g, w0, x, y_oh, args.epochs, eng)
+        t_train = time.perf_counter() - t0
+        infer = nn2sql.infer(g, eng)
+        infer(wf, x)                                   # warm
+        t0 = time.perf_counter()
+        probs = infer(wf, x)
+        t_inf = time.perf_counter() - t0
+        acc = float(nn2sql.accuracy(probs, y))
+        print(f"[{kind:10s}] train {args.epochs} iters: {t_train:6.2f}s "
+              f"({args.batch * args.epochs / t_train:8.0f} tuples/s) | "
+              f"inference: {args.batch / max(t_inf, 1e-9):9.0f} tuples/s | "
+              f"acc {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the paper end-to-end in 60 seconds.
+
+Transforms Iris into the relational representation (§4.1), trains the
+2-layer sigmoid network by gradient descent inside a recursive CTE (§4.2)
+on BOTH execution engines, evaluates prediction accuracy (§4.3), and
+prints the actual SQL-92 + SQL/Array queries the transpiler generates —
+Listings 7 and 10 of the paper, derived automatically by Algorithm 1.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core import Engine, nn2sql, sqlgen
+from repro.core.relational import one_hot_dense
+from repro.data import make_iris
+
+ITERS = 300
+HIDDEN = 20
+
+
+def main():
+    x, y = make_iris()
+    y_oh = one_hot_dense(y, 3).to_dense()        # Listing 5: outer join
+    spec = nn2sql.MLPSpec(n_rows=150, n_features=4, n_hidden=HIDDEN,
+                          n_classes=3, lr=0.05)
+    graph = nn2sql.build_graph(spec)
+    w0 = nn2sql.init_weights(spec)
+
+    for kind in ("dense", "relational"):
+        eng = Engine(kind)
+        t0 = time.perf_counter()
+        wf, _ = nn2sql.train(graph, w0, x, y_oh, ITERS, eng)
+        dt = time.perf_counter() - t0
+        probs = nn2sql.infer(graph, eng)(wf, x)
+        acc = float(nn2sql.accuracy(probs, y))
+        rep = "array data type (Section 5)" if kind == "dense" \
+            else "relational / SQL-92 (Section 4)"
+        print(f"[{rep}] {ITERS} iterations in {dt:.2f}s — "
+              f"accuracy {acc:.3f}")
+
+    print("\n--- generated SQL-92 training query (Listing 7) "
+          "[first 40 lines] ---")
+    sql = sqlgen.training_query_sql92(graph, ITERS, spec.lr)
+    print("\n".join(sql.splitlines()[:40]))
+    print("  ...")
+    print("\n--- generated SQL+Arrays training query (Listing 10) "
+          "[first 15 lines] ---")
+    print("\n".join(sqlgen.training_query_arrays(
+        graph, ITERS, spec.lr).splitlines()[:15]))
+    print("  ...")
+
+
+if __name__ == "__main__":
+    main()

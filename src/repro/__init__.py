@@ -1,0 +1,3 @@
+"""repro: 'The Duck's Brain' — in-database NN training/inference, as a
+multi-pod JAX framework. See DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Sharded async checkpointing with elastic restore."""
+from .checkpointer import Checkpointer

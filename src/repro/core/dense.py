@@ -1,0 +1,50 @@
+"""The "array data type" engine (paper Section 5).
+
+The paper's second backend extends SQL arrays (``float[][]``) with matrix
+algebra: ``**`` (matmul), ``*`` (Hadamard), ``-``, ``transpose``, ``sig`` and
+elementwise aggregation. Here the array data type is simply a dense
+``jnp.ndarray`` and the operations map 1:1 onto XLA ops; XLA's fusion pass
+performs the "condensing of subsequent calls" that §6.3.2 plans as future
+work for the database's query optimiser.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import expr as E
+from .autodiff import MapDeriv
+
+
+def evaluate(roots: list[E.Expr], env: dict[str, jnp.ndarray]) -> list[jnp.ndarray]:
+    """Evaluate expression DAG(s) with per-node memoisation (CTE caching)."""
+    cache: dict[int, jnp.ndarray] = {}
+
+    def ev(node: E.Expr) -> jnp.ndarray:
+        if id(node) in cache:
+            return cache[id(node)]
+        if isinstance(node, E.Var):
+            out = env[node.name]
+        elif isinstance(node, E.Const):
+            out = jnp.full(node.shape, node.value, dtype=jnp.float32)
+        elif isinstance(node, E.MatMul):
+            out = ev(node.x) @ ev(node.y)
+        elif isinstance(node, E.Hadamard):
+            out = ev(node.x) * ev(node.y)
+        elif isinstance(node, E.Add):
+            out = ev(node.x) + ev(node.y)
+        elif isinstance(node, E.Sub):
+            out = ev(node.x) - ev(node.y)
+        elif isinstance(node, E.Scale):
+            out = node.c * ev(node.x)
+        elif isinstance(node, E.Transpose):
+            out = ev(node.x).T
+        elif isinstance(node, MapDeriv):
+            out = node.fn.df(ev(node.x), ev(node.fx))
+        elif isinstance(node, E.Map):
+            out = node.fn.fn(ev(node.x))
+        else:  # pragma: no cover
+            raise TypeError(f"unknown node {type(node)}")
+        cache[id(node)] = out
+        return out
+
+    return [ev(r) for r in roots]

@@ -1,0 +1,79 @@
+"""Unified engine interface over the two representations.
+
+``Engine("dense")``   — the array-data-type backend (paper Section 5).
+``Engine("relational")`` — the SQL-92 relational backend (paper Section 4).
+
+Both evaluate the same expression DAG; gradients come from Algorithm 1
+(``core.autodiff``), *not* ``jax.grad`` — jax.grad is used only as a test
+oracle. ``value_and_grad_fn`` returns a jit-compiled function.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import autodiff, dense, expr as E, rel_engine
+from .relational import RelTensor
+
+
+class Engine:
+    def __init__(self, kind: str):
+        if kind not in ("dense", "relational"):
+            raise ValueError(kind)
+        self.kind = kind
+
+    # -- representation conversion ------------------------------------------
+    def lift(self, x: jnp.ndarray):
+        return RelTensor.from_dense(x) if self.kind == "relational" else x
+
+    def lower(self, x) -> jnp.ndarray:
+        return x.to_dense() if isinstance(x, RelTensor) else x
+
+    # -- evaluation -----------------------------------------------------------
+    def evaluate(self, roots: list[E.Expr], env: dict):
+        ev = rel_engine.evaluate if self.kind == "relational" else dense.evaluate
+        return ev(roots, env)
+
+    def eval_fn(self, roots: list[E.Expr]) -> Callable:
+        """jit-compiled evaluator: env dict (dense arrays) → dense outputs."""
+
+        @jax.jit
+        def fn(env: dict[str, jnp.ndarray]):
+            lifted = {k: self.lift(v) for k, v in env.items()}
+            return [self.lower(o) for o in self.evaluate(roots, lifted)]
+
+        return fn
+
+    def value_and_grad_fn(self, loss: E.Expr, wrt: list[E.Var]) -> Callable:
+        """jit fn: env → (loss value, {var name: gradient}) via Algorithm 1."""
+        grads = autodiff.gradients(loss, wrt)
+        roots = [loss] + [grads[v] for v in wrt]
+
+        @jax.jit
+        def fn(env: dict[str, jnp.ndarray]):
+            lifted = {k: self.lift(v) for k, v in env.items()}
+            outs = self.evaluate(roots, lifted)
+            loss_val = self.lower(outs[0])
+            return loss_val, {v.name: self.lower(g)
+                              for v, g in zip(wrt, outs[1:])}
+
+        return fn
+
+
+def sgd_step_fn(loss: E.Expr, wrt: list[E.Var], lr: float, engine: Engine
+                ) -> Callable:
+    """One gradient-descent update — the recursive step of Listing 7/10:
+    ``select iter+1, w.v - γ·d_w.v from w_, d_w where …``."""
+    vg = engine.value_and_grad_fn(loss, wrt)
+
+    @jax.jit
+    def step(weights: dict[str, jnp.ndarray], data_env: dict[str, jnp.ndarray]):
+        env = {**weights, **data_env}
+        loss_val, grads = vg(env)
+        new_w = {k: weights[k] - lr * grads[k] for k in weights}
+        return new_w, jnp.mean(loss_val)
+
+    return step

@@ -1,0 +1,270 @@
+"""Matrix-expression IR — the paper's CTE graph.
+
+Every node corresponds to one CTE in the paper's SQL formulation
+(Listing 7: ``a_xh``, ``a_ho``, ``l_ho``, ``d_ho``, ``l_xh``, ``d_xh``, ``d_w``):
+a named, cached matrix expression. The engines (``core.dense``,
+``core.relational``) evaluate the DAG with per-node memoisation — exactly the
+"cached expression computed in the forward pass" of the paper's Section 2 —
+and ``core.autodiff`` implements Algorithm 1 over these node types.
+
+Node types mirror the paper's building blocks (Listing 4):
+
+  MatMul     X · Y        join on inner index + group-by sum
+  Hadamard   X ∘ Y        join on both indices
+  Add / Sub  X ± Y        join on both indices
+  Scale      c · X        map in the select-clause
+  Map        f(X)         map in the select-clause (sigmoid, 1-x, x², …)
+  Transpose  Xᵀ           index rename
+  Var        leaf         a stored table (weights / data)
+  Const      literal      generate_series-style constant matrix
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+_counter = itertools.count()
+
+
+def _fresh(prefix: str) -> str:
+    return f"{prefix}_{next(_counter)}"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Expr:
+    """Base class. ``shape`` is the logical matrix shape (rows, cols)."""
+
+    name: str
+    shape: tuple[int, int]
+
+    # -- operator sugar ----------------------------------------------------
+    def __matmul__(self, other: "Expr") -> "Expr":
+        return matmul(self, other)
+
+    def __mul__(self, other) -> "Expr":
+        if isinstance(other, Expr):
+            return hadamard(self, other)
+        return scale(float(other), self)
+
+    __rmul__ = __mul__
+
+    def __add__(self, other: "Expr") -> "Expr":
+        return add(self, other)
+
+    def __sub__(self, other: "Expr") -> "Expr":
+        return sub(self, other)
+
+    @property
+    def T(self) -> "Expr":
+        return transpose(self)
+
+    def children(self) -> tuple["Expr", ...]:
+        return ()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Var(Expr):
+    """Leaf: a stored table (weight matrix or input relation)."""
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Const(Expr):
+    """A constant matrix (broadcast scalar), e.g. the ``1`` in ``1 - a``."""
+
+    value: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MatMul(Expr):
+    x: Expr = None
+    y: Expr = None
+
+    def children(self):
+        return (self.x, self.y)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Hadamard(Expr):
+    x: Expr = None
+    y: Expr = None
+
+    def children(self):
+        return (self.x, self.y)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Add(Expr):
+    x: Expr = None
+    y: Expr = None
+
+    def children(self):
+        return (self.x, self.y)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Sub(Expr):
+    x: Expr = None
+    y: Expr = None
+
+    def children(self):
+        return (self.x, self.y)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Scale(Expr):
+    c: float = 1.0
+    x: Expr = None
+
+    def children(self):
+        return (self.x,)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Transpose(Expr):
+    x: Expr = None
+
+    def children(self):
+        return (self.x,)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MapFn:
+    """An elementwise function with its derivative.
+
+    ``df(x_val, out_val)`` returns f'(x) given the input value and the cached
+    output value — e.g. sigmoid's derivative is expressed from the *output*
+    (``out∘(1-out)``), matching the paper's Equations 7/9 which reuse the
+    cached CTE ``a_ho``/``a_xh`` rather than re-evaluating sig'.
+    ``sql(v)`` renders the select-clause expression for sqlgen.
+    """
+
+    name: str
+    fn: Callable
+    df: Callable
+    sql: Callable[[str], str]
+
+
+SIGMOID = MapFn(
+    name="sig",
+    fn=lambda x: 1.0 / (1.0 + jnp.exp(-x)),
+    df=lambda x, out: out * (1.0 - out),
+    sql=lambda v: f"1/(1+exp(-{v}))",
+)
+SQUARE = MapFn(
+    name="sqr",
+    fn=lambda x: x * x,
+    df=lambda x, out: 2.0 * x,
+    sql=lambda v: f"{v}*{v}",
+)
+RELU = MapFn(
+    name="relu",
+    fn=lambda x: jnp.maximum(x, 0.0),
+    df=lambda x, out: (x > 0.0).astype(x.dtype),
+    sql=lambda v: f"greatest({v},0)",
+)
+ONE_MINUS = MapFn(
+    name="one_minus",
+    fn=lambda x: 1.0 - x,
+    df=lambda x, out: jnp.full_like(x, -1.0),
+    sql=lambda v: f"1-{v}",
+)
+
+MAP_FNS = {f.name: f for f in (SIGMOID, SQUARE, RELU, ONE_MINUS)}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Map(Expr):
+    fn: MapFn = None
+    x: Expr = None
+
+    def children(self):
+        return (self.x,)
+
+
+# ---------------------------------------------------------------------------
+# constructors with shape checking
+# ---------------------------------------------------------------------------
+
+def var(name: str, shape: tuple[int, int]) -> Var:
+    return Var(name=name, shape=tuple(shape))
+
+
+def const(value: float, shape: tuple[int, int]) -> Const:
+    return Const(name=_fresh("const"), shape=tuple(shape), value=float(value))
+
+
+def matmul(x: Expr, y: Expr, name: Optional[str] = None) -> MatMul:
+    if x.shape[1] != y.shape[0]:
+        raise ValueError(f"matmul inner dims: {x.shape} @ {y.shape}")
+    return MatMul(name=name or _fresh("mm"), shape=(x.shape[0], y.shape[1]), x=x, y=y)
+
+
+def _elementwise(cls, x: Expr, y: Expr, prefix: str, name=None):
+    if x.shape != y.shape:
+        raise ValueError(f"{prefix} shapes: {x.shape} vs {y.shape}")
+    return cls(name=name or _fresh(prefix), shape=x.shape, x=x, y=y)
+
+
+def hadamard(x: Expr, y: Expr, name=None) -> Hadamard:
+    return _elementwise(Hadamard, x, y, "had", name)
+
+
+def add(x: Expr, y: Expr, name=None) -> Add:
+    return _elementwise(Add, x, y, "add", name)
+
+
+def sub(x: Expr, y: Expr, name=None) -> Sub:
+    return _elementwise(Sub, x, y, "sub", name)
+
+
+def scale(c: float, x: Expr, name=None) -> Scale:
+    return Scale(name=name or _fresh("scale"), shape=x.shape, c=float(c), x=x)
+
+
+def transpose(x: Expr, name=None) -> Transpose:
+    return Transpose(name=name or _fresh("t"), shape=(x.shape[1], x.shape[0]), x=x)
+
+
+def mapfn(fn: MapFn, x: Expr, name=None) -> Map:
+    return Map(name=name or _fresh(fn.name), shape=x.shape, fn=fn, x=x)
+
+
+def sigmoid(x: Expr, name=None) -> Map:
+    return mapfn(SIGMOID, x, name)
+
+
+def square(x: Expr, name=None) -> Map:
+    return mapfn(SQUARE, x, name)
+
+
+def relu(x: Expr, name=None) -> Map:
+    return mapfn(RELU, x, name)
+
+
+# ---------------------------------------------------------------------------
+# graph utilities
+# ---------------------------------------------------------------------------
+
+def topo_order(*roots: Expr) -> list[Expr]:
+    """Deterministic post-order (children before parents), deduplicated."""
+    seen: dict[int, Expr] = {}
+    order: list[Expr] = []
+
+    def visit(node: Expr):
+        if id(node) in seen:
+            return
+        seen[id(node)] = node
+        for c in node.children():
+            visit(c)
+        order.append(node)
+
+    for r in roots:
+        visit(r)
+    return order
+
+
+def free_vars(*roots: Expr) -> list[Var]:
+    return [n for n in topo_order(*roots) if isinstance(n, Var)]

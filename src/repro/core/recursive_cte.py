@@ -1,0 +1,56 @@
+"""Recursive CTE — the paper's iteration construct, on TPU.
+
+``WITH RECURSIVE w(iter, id, i, j, v) AS (base UNION ALL step)`` drives
+gradient descent in Listings 1/7/10: the weight table is the recursion
+variable, each recursion step emits the next weight version.
+
+Two semantics are provided:
+
+``recursive_cte(..., materialize_history=False)`` (default)
+    ``lax.scan`` with a donated carry: only the latest weight version is
+    live. This is the optimisation the paper's §8 asks database engines for
+    ("optimisers should eliminate intermediate results within the CTE").
+
+``materialize_history=True``
+    Faithful UNION-ALL semantics: every iteration's weight table stays
+    materialised (stacked along a leading ``iter`` axis), reproducing the
+    paper's observation that "the recursive CTE grew with each iteration.
+    This resulted in increased memory consumption per iteration, which
+    limited the number of iterations and the model size."
+    ``benchmarks/cte_growth.py`` measures the difference.
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+import jax
+import jax.numpy as jnp
+
+T = TypeVar("T")
+
+
+def recursive_cte(base: T, step: Callable[[T, int], T], n_iters: int,
+                  materialize_history: bool = False):
+    """Iterate ``step`` starting from ``base``.
+
+    Returns ``(final, history)``; ``history`` is ``None`` unless
+    ``materialize_history`` — then it stacks every iterate (incl. base row 0)
+    along axis 0, like ``select * from w order by iter``.
+    """
+
+    def body(carry, it):
+        nxt = step(carry, it)
+        return nxt, (nxt if materialize_history else None)
+
+    final, hist = jax.lax.scan(body, base, jnp.arange(n_iters))
+    if materialize_history:
+        hist = jax.tree.map(
+            lambda b, h: jnp.concatenate([b[None], h], axis=0), base, hist)
+        return final, hist
+    return final, None
+
+
+def history_bytes(tree, n_iters: int) -> int:
+    """Memory the UNION-ALL table reaches after ``n_iters`` recursions."""
+    per_iter = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+    return per_iter * (n_iters + 1)

@@ -1,0 +1,52 @@
+"""Relational (SQL-92) engine: evaluates the expression DAG over RelTensors.
+
+Mirrors ``core.dense`` but every node is computed with the relational
+building blocks of Listing 4; each memoised node is one CTE of the generated
+query (``core.sqlgen`` prints the actual SQL for the same DAG).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import expr as E
+from .autodiff import MapDeriv
+from .relational import RelTensor
+
+
+def evaluate(roots: list[E.Expr], env: dict[str, RelTensor]) -> list[RelTensor]:
+    cache: dict[int, RelTensor] = {}
+
+    def ev(node: E.Expr) -> RelTensor:
+        if id(node) in cache:
+            return cache[id(node)]
+        if isinstance(node, E.Var):
+            out = env[node.name]
+            if not isinstance(out, RelTensor):
+                raise TypeError(f"relational engine needs RelTensor for {node.name}")
+        elif isinstance(node, E.Const):
+            out = RelTensor.from_dense(
+                jnp.full(node.shape, node.value, dtype=jnp.float32))
+        elif isinstance(node, E.MatMul):
+            out = ev(node.x).matmul(ev(node.y))
+        elif isinstance(node, E.Hadamard):
+            out = ev(node.x).hadamard(ev(node.y))
+        elif isinstance(node, E.Add):
+            out = ev(node.x).add(ev(node.y))
+        elif isinstance(node, E.Sub):
+            out = ev(node.x).sub(ev(node.y))
+        elif isinstance(node, E.Scale):
+            out = ev(node.x).scale(node.c)
+        elif isinstance(node, E.Transpose):
+            out = ev(node.x).transpose()
+        elif isinstance(node, MapDeriv):
+            xv, fxv = ev(node.x), ev(node.fx)
+            out = RelTensor(i=xv.i, j=xv.j, v=node.fn.df(xv.v, fxv.v),
+                            shape=xv.shape)
+        elif isinstance(node, E.Map):
+            out = ev(node.x).map(node.fn.fn)
+        else:  # pragma: no cover
+            raise TypeError(f"unknown node {type(node)}")
+        cache[id(node)] = out
+        return out
+
+    return [ev(r) for r in roots]

@@ -1,0 +1,216 @@
+"""SQL generation from the expression DAG.
+
+The paper's §8 outlook: "a transpiler that automatically generates the
+corresponding SQL queries from common array query languages … could offer
+additional features such as automatic differentiation for the generation of
+queries for model training and inference." This module is that transpiler:
+the same DAG the JAX engines execute is rendered as
+
+* **SQL-92** — one CTE per node using the relational representation
+  (Listing 4 building blocks, Listing 7 training query), and
+* **SQL + Arrays** — the nested-subquery style over an array data type
+  (Listing 10), with ``**`` matmul, ``*`` Hadamard, ``transpose``, ``sig``.
+
+Generated queries are golden-tested against the paper's listings' structure
+in ``tests/test_sqlgen.py``.
+"""
+from __future__ import annotations
+
+from . import expr as E
+from .autodiff import MapDeriv, derive
+
+
+# ---------------------------------------------------------------------------
+# SQL-92: relational representation
+# ---------------------------------------------------------------------------
+
+def _cte_sql(node: E.Expr, nm: dict[int, str]) -> str:
+    """Render one node as a select over its children's CTEs (Listing 4)."""
+    n = lambda c: nm[id(c)]
+    if isinstance(node, E.MatMul):
+        return (f"select m.i, n.j, sum(m.v*n.v) as v\n"
+                f"  from {n(node.x)} as m inner join {n(node.y)} as n"
+                f" on m.j = n.i\n  group by m.i, n.j")
+    if isinstance(node, (E.Hadamard, E.Add, E.Sub)):
+        op = {"Hadamard": "*", "Add": "+", "Sub": "-"}[type(node).__name__]
+        return (f"select m.i, m.j, m.v {op} n.v as v\n"
+                f"  from {n(node.x)} as m inner join {n(node.y)} as n"
+                f" on m.i = n.i and m.j = n.j")
+    if isinstance(node, E.Scale):
+        return f"select i, j, {node.c} * v as v from {n(node.x)}"
+    if isinstance(node, E.Transpose):
+        return f"select j as i, i as j, v from {n(node.x)}"
+    if isinstance(node, MapDeriv):
+        if node.fn is E.SIGMOID:  # out·(1-out) from the cached CTE
+            return (f"select i, j, v*(1-v) as v from {n(node.fx)}")
+        if node.fn is E.SQUARE:
+            return f"select i, j, 2*v as v from {n(node.x)}"
+        if node.fn is E.RELU:
+            return (f"select i, j, case when v > 0 then 1 else 0 end as v"
+                    f" from {n(node.x)}")
+        raise NotImplementedError(node.fn.name)
+    if isinstance(node, E.Map):
+        return f"select i, j, {node.fn.sql('v')} as v from {n(node.x)}"
+    if isinstance(node, E.Const):
+        rows, cols = node.shape
+        return (f"select a.i, b.j, {node.value} as v\n"
+                f"  from (select generate_series as i from"
+                f" generate_series(1,{rows})) a,\n"
+                f"       (select generate_series as j from"
+                f" generate_series(1,{cols})) b")
+    raise TypeError(type(node))
+
+
+def to_sql92(roots: list[E.Expr], select: str | None = None) -> str:
+    """Emit a WITH query: one CTE per non-leaf node, topologically ordered."""
+    order = E.topo_order(*roots)
+    nm: dict[int, str] = {}
+    ctes: list[str] = []
+    for node in order:
+        if isinstance(node, E.Var):
+            nm[id(node)] = node.name
+            continue
+        nm[id(node)] = node.name
+        ctes.append(f"{node.name}(i, j, v) as (\n  {_cte_sql(node, nm)}\n)")
+    body = ",\n".join(ctes)
+    tail = select or f"select * from {nm[id(roots[-1])]} order by i, j"
+    return f"with {body}\n{tail};"
+
+
+def training_query_sql92(graph, n_iters: int, lr: float) -> str:
+    """Listing 7: the recursive CTE whose step evaluates the model, runs
+    Algorithm 1's CTEs, and emits the updated weight table."""
+    grads = derive(graph.loss, E.const(1.0, graph.loss.shape))
+    g_xh, g_ho = grads[graph.w_xh], grads[graph.w_ho]
+    order = E.topo_order(graph.loss, g_xh, g_ho)
+    nm: dict[int, str] = {}
+    ctes: list[str] = []
+    for node in order:
+        if isinstance(node, E.Var):
+            if node.name in ("w_xh", "w_ho"):
+                wid = 0 if node.name == "w_xh" else 1
+                nm[id(node)] = node.name
+                ctes.append(
+                    f"{node.name}(i, j, v) as (\n"
+                    f"  select i, j, v from w_ where id = {wid}\n"
+                    f"   and iter = (select max(iter) from w_)\n)")
+            else:
+                nm[id(node)] = node.name
+            continue
+        nm[id(node)] = node.name
+        ctes.append(f"{node.name}(i, j, v) as (\n  {_cte_sql(node, nm)}\n)")
+    body = ",\n".join(ctes)
+    return (
+        "with recursive w (iter, id, i, j, v) as (\n"
+        "  (select 0, 0, * from w_xh_init union all\n"
+        "   select 0, 1, * from w_ho_init)\n"
+        "  union all\n"
+        "  select * from (\n"
+        "  with w_(iter, id, i, j, v) as (\n"
+        "    select * from w  -- recursive reference only allowed once\n"
+        f"  ),\n{body},\n"
+        "  d_w(id, i, j, v) as (\n"
+        f"    select 0, i, j, v from {nm[id(g_xh)]} union all\n"
+        f"    select 1, i, j, v from {nm[id(g_ho)]}\n"
+        "  )\n"
+        "  select w_.iter + 1, w_.id, w_.i, w_.j,\n"
+        f"         w_.v - {lr} * d_w.v\n"
+        "    from w_, d_w\n"
+        f"   where w_.iter < {n_iters} and w_.id = d_w.id\n"
+        "     and w_.i = d_w.i and w_.j = d_w.j\n"
+        "  ) step\n"
+        ")\nselect * from w;")
+
+
+# ---------------------------------------------------------------------------
+# SQL + Arrays (Listing 10 style)
+# ---------------------------------------------------------------------------
+
+def _array_expr(node: E.Expr) -> str:
+    a = _array_expr
+    if isinstance(node, E.Var):
+        return node.name
+    if isinstance(node, E.Const):
+        return str(node.value)  # broadcast scalar, as in ``1 - a_ho``
+    if isinstance(node, E.MatMul):
+        return f"({a(node.x)} ** {a(node.y)})"
+    if isinstance(node, E.Hadamard):
+        return f"({a(node.x)} * {a(node.y)})"
+    if isinstance(node, E.Add):
+        return f"({a(node.x)} + {a(node.y)})"
+    if isinstance(node, E.Sub):
+        return f"({a(node.x)} - {a(node.y)})"
+    if isinstance(node, E.Scale):
+        return f"({node.c} * {a(node.x)})"
+    if isinstance(node, E.Transpose):
+        return f"transpose({a(node.x)})"
+    if isinstance(node, MapDeriv):
+        if node.fn is E.SIGMOID:
+            return f"({a(node.fx)} * (1 - {a(node.fx)}))"
+        if node.fn is E.SQUARE:
+            return f"(2 * {a(node.x)})"
+        raise NotImplementedError(node.fn.name)
+    if isinstance(node, E.Map):
+        return f"{node.fn.name}({a(node.x)})"
+    raise TypeError(type(node))
+
+
+def to_sql_arrays(roots: list[E.Expr]) -> str:
+    """Nested select with one derived-table level per CTE (Listing 10)."""
+    order = [n for n in E.topo_order(*roots)
+             if not isinstance(n, (E.Var, E.Const))]
+    # innermost: the raw tables; each level materialises one named expression
+    inner = "select * from data, weights"
+    for node in order:
+        expr_sql = _array_expr_shallow(node)
+        inner = f"select {expr_sql} as {node.name}, * from (\n{inner}) q_{node.name}"
+    return inner + ";"
+
+
+def _array_expr_shallow(node: E.Expr) -> str:
+    """Like _array_expr but children referenced by their CTE names."""
+    name = lambda c: (str(c.value) if isinstance(c, E.Const) else c.name)
+    if isinstance(node, E.MatMul):
+        return f"({name(node.x)} ** {name(node.y)})"
+    if isinstance(node, E.Hadamard):
+        return f"({name(node.x)} * {name(node.y)})"
+    if isinstance(node, E.Add):
+        return f"({name(node.x)} + {name(node.y)})"
+    if isinstance(node, E.Sub):
+        return f"({name(node.x)} - {name(node.y)})"
+    if isinstance(node, E.Scale):
+        return f"({node.c} * {name(node.x)})"
+    if isinstance(node, E.Transpose):
+        return f"transpose({name(node.x)})"
+    if isinstance(node, MapDeriv):
+        if node.fn is E.SIGMOID:
+            return f"({name(node.fx)} * (1 - {name(node.fx)}))"
+        if node.fn is E.SQUARE:
+            return f"(2 * {name(node.x)})"
+        raise NotImplementedError(node.fn.name)
+    if isinstance(node, E.Map):
+        return f"{node.fn.name}({name(node.x)})"
+    raise TypeError(type(node))
+
+
+def training_query_arrays(graph, n_iters: int, lr: float) -> str:
+    """Listing 10: recursive table over array-typed weight columns, with one
+    named derived-table level per cached expression (a_xh, a_ho, l_ho, …) so
+    the backward pass reuses the forward CTEs exactly as the paper does."""
+    grads = derive(graph.loss, E.const(1.0, graph.loss.shape))
+    g_xh, g_ho = grads[graph.w_xh], grads[graph.w_ho]
+    order = [n for n in E.topo_order(g_xh, g_ho)
+             if not isinstance(n, (E.Var, E.Const))]
+    inner = f"select * from data, w where id < {n_iters}"
+    for node in order:
+        inner = (f"select {_array_expr_shallow(node)} as {node.name}, *"
+                 f" from (\n{inner}) q_{node.name}")
+    return (
+        "with recursive w (id, w_xh, w_ho) as (\n"
+        "  select 0, w_xh, w_ho from weights\n"
+        "  union all\n"
+        "  select id + 1,\n"
+        f"         w_xh - {lr} * {g_xh.name},\n"
+        f"         w_ho - {lr} * {g_ho.name}\n"
+        f"    from (\n{inner})\n"
+        ")\nselect * from w;")

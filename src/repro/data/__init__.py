@@ -1,0 +1,2 @@
+"""Data pipeline: paper datasets (synthetic, shape-faithful) + LM token streams."""
+from .pipeline import TokenPipeline, make_iris, make_mnist_like, one_hot_labels, replicate, stub_frontend_batch

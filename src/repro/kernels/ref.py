@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth; kernel tests sweep shapes and
+dtypes asserting allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def relational_matmul(row_ids: jax.Array, col_ids: jax.Array,
+                      vals: jax.Array, b: jax.Array, m: int) -> jax.Array:
+    """The paper's join + group-by matmul over a COO relation.
+
+    out[i, :] = Σ_{t: row_ids[t]=i} vals[t] · b[col_ids[t], :]
+    Padding tuples carry ``row_ids == m`` and are dropped.
+    """
+    joined = vals[:, None].astype(jnp.float32) * b[col_ids].astype(jnp.float32)
+    return jax.ops.segment_sum(joined, row_ids, num_segments=m)
+
+
+def fused_sigmoid_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """sig(X · W) — one forward CTE of the paper's model (Eq. 4)."""
+    z = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    return (1.0 / (1.0 + jnp.exp(-z))).astype(x.dtype)
+
+
+def onehot_embed(ids: jax.Array, table: jax.Array) -> jax.Array:
+    """onehot(ids) · table — the one-hot matmul is a row gather (§4.1)."""
+    return table[ids]
+
+
+def moe_dispatch(x: jax.Array, sort_idx: jax.Array,
+                 gates: jax.Array) -> jax.Array:
+    """Dispatch side of the token→expert relation: gather each assignment's
+    token row and scale by its gate value (the join's select clause)."""
+    return x[sort_idx] * gates[:, None].astype(x.dtype)
+
+
+def moe_combine(expert_out: jax.Array, row_ids: jax.Array,
+                n_tokens: int) -> jax.Array:
+    """Combine side: group the relation by destination token and sum —
+    identical to relational_matmul's aggregation with vals pre-applied."""
+    return jax.ops.segment_sum(expert_out.astype(jnp.float32), row_ids,
+                               num_segments=n_tokens).astype(expert_out.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, scale: float | None = None
+                    ) -> jax.Array:
+    """Dense-softmax attention oracle. q: (B, Hq, S, D); k/v: (B, Hkv, S, D)
+    with Hq a multiple of Hkv (GQA)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rwkv6_scan(r, k, v, w, u, s0):
+    """RWKV-6 recurrence oracle. r/k/v/w: (BH,S,N); u: (BH,N); s0: (BH,N,N).
+    o_t = r_t·(S + diag(u) k_t v_tᵀ); S ← diag(w_t) S + k_t v_tᵀ."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[:, :, None] * v_t[:, None, :]
+        o = jnp.einsum("bi,bij->bj", r_t, S + u[:, :, None] * kv)
+        return w_t[:, :, None] * S + kv, o
+
+    seq = tuple(x.transpose(1, 0, 2).astype(jnp.float32)
+                for x in (r, k, v, w))
+    s_fin, outs = jax.lax.scan(step, s0.astype(jnp.float32), seq)
+    return outs.transpose(1, 0, 2), s_fin

@@ -1,0 +1,181 @@
+"""Sharding rules: params (TP + FSDP), optimizer state (ZeRO), batches,
+and serving caches, for every architecture family.
+
+Parallelism map (DESIGN.md §5):
+  * DP    — batch over ('pod', 'data')
+  * TP    — attention heads / FFN hidden / vocab over 'model'
+  * EP    — routed experts over 'model'
+  * SP    — KV-cache sequence over spare axes when batch/heads don't divide
+  * FSDP  — weight dim-0 over 'data' (within-pod only; cross-pod stays
+            replicated so DCI never carries weight gathers)
+  * ZeRO  — optimizer state inherits the param sharding (elementwise update)
+
+Rules are name-based over the param tree; any dim is sharded only when
+divisible by the axis size, so one rule set covers all ten configs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import axis_size, data_axes
+
+# leaf-name → which dim prefers the 'model' axis (before any leading L axis)
+_COL = {"wq", "wk", "wv", "wg", "wi", "wkv_a", "wk_b", "wv_b", "wk_rope",
+        "in_proj", "lm_head", "wr", "conv_w"}     # output-dim sharded (last)
+_ROW = {"wo", "out_proj"}                          # contraction-dim (first)
+_EXPERT = {"wi", "wg", "wo"}                       # under a "moe" parent: dim 0
+_VOCAB = {"embed"}                                 # dim 0 (vocab)
+_REPLICATED = {"w0", "u", "a_log", "dt_bias", "d_skip", "mu", "mu_k", "mu_r",
+               "w_lora_a", "w_lora_b", "router", "bq", "bk", "bv", "bi", "bo",
+               "b"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return out
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def param_spec(path, shape: tuple[int, ...], mesh, *, fsdp: bool = True,
+               stacked: bool = False) -> P:
+    names = _path_names(path)
+    leaf = names[-1] if names else ""
+    model_n = axis_size(mesh, "model")
+    data_n = axis_size(mesh, "data")
+    off = 1 if stacked else 0          # leading L axis of scanned stacks
+    nd = len(shape)
+    spec: list[Any] = [None] * nd
+    body = list(range(off, nd))
+    if not body:
+        return P()
+
+    model_dim = None
+    if "moe" in names and leaf in _EXPERT and nd - off == 3:
+        model_dim = body[0]            # expert parallelism
+    elif leaf in _VOCAB:
+        model_dim = body[0]
+    elif leaf in _ROW:
+        model_dim = body[0]
+    elif leaf in _COL and leaf not in _REPLICATED:
+        model_dim = body[-1]
+    if (model_dim is not None and
+            _divisible(shape[model_dim], model_n)):
+        spec[model_dim] = "model"
+    else:
+        model_dim = None
+
+    if fsdp and nd - off >= 2:
+        # FSDP: biggest remaining dim divisible by the in-pod data axis
+        cands = sorted((d for d in body if d != model_dim),
+                       key=lambda d: -shape[d])
+        for d in cands:
+            if _divisible(shape[d], data_n) and shape[d] >= data_n * 8:
+                spec[d] = "data"
+                break
+    return P(*spec)
+
+
+def param_shardings(params_shapes, mesh, *, fsdp: bool = True):
+    """ShapeDtypeStruct tree → NamedSharding tree (same structure)."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        stacked = any(n in ("layers", "prologue") for n in names)
+        return NamedSharding(mesh,
+                             param_spec(path, leaf.shape, mesh, fsdp=fsdp,
+                                        stacked=stacked))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def opt_shardings(opt_shapes, param_sh, mesh):
+    """ZeRO: m/v mirror the param shardings; scalars replicated."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        if names and names[0] in ("m", "v", "master"):
+            sub = [k for k in path[1:]]
+            stacked = any((hasattr(k, "key") and str(k.key) in
+                           ("layers", "prologue")) for k in sub)
+            return NamedSharding(mesh, param_spec(sub, leaf.shape, mesh,
+                                                  stacked=stacked))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+# batches and caches
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_shapes, mesh, global_batch: int):
+    dp = data_axes(mesh)
+    dp_n = axis_size(mesh, dp)
+    bspec = dp if _divisible(global_batch, dp_n) else None
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd >= 1 and leaf.shape[0] == global_batch and bspec:
+            return NamedSharding(mesh, P(bspec, *([None] * (nd - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes, mesh, batch_size: int, max_len: int,
+                    cfg) -> Any:
+    """KV caches / recurrent states. Priority: batch over DP axes; heads
+    over 'model' when divisible; otherwise the sequence dim picks up the
+    unused axis (sequence parallelism — flash-decoding style)."""
+    dp = data_axes(mesh)
+    dp_n = axis_size(mesh, dp)
+    model_n = axis_size(mesh, "model")
+    batch_ok = _divisible(batch_size, dp_n) and batch_size >= dp_n
+
+    def one(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        spec: list[Any] = [None] * nd
+        # dim 0 is the layer stack; identify batch / sequence / head dims
+        batch_dim = None
+        if batch_size > 1:
+            batch_dim = next((i for i in range(1, nd)
+                              if shape[i] == batch_size), None)
+        seq_dim = next((i for i in range(1, nd)
+                        if shape[i] == max_len and i != batch_dim), None)
+        head_dim = None
+        for i in range(1, nd - 1):                 # last dim = feature width
+            if i in (batch_dim, seq_dim):
+                continue
+            if _divisible(shape[i], model_n) and shape[i] >= model_n:
+                head_dim = i
+                break
+        if batch_dim is not None and batch_ok:
+            spec[batch_dim] = dp
+        if head_dim is not None:
+            spec[head_dim] = "model"
+        if seq_dim is not None:                    # SP picks up free axes
+            free: list[str] = []
+            if batch_dim is None or not batch_ok:
+                free += list(dp)
+            if head_dim is None:
+                free.append("model")
+            if free and _divisible(shape[seq_dim],
+                                   int(np.prod([axis_size(mesh, a)
+                                                for a in free]))):
+                spec[seq_dim] = tuple(free)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_shapes)

@@ -1,0 +1,4 @@
+"""NN substrate: layers, MoE (relational + array impls), SSMs, model assembly."""
+from . import layers, model, moe, ssm
+
+__all__ = ["layers", "model", "moe", "ssm"]

@@ -1,0 +1,284 @@
+"""Mixture-of-Experts with the paper's two matrix representations.
+
+The router's output *is* the paper's relation ``{[i, j, v]}``: token i is
+assigned to expert j with gate value v. The two execution strategies the
+paper benchmarks against each other (relational vs array data type) both
+exist here, selectable per config — the dry-run/§Perf measures them at
+datacenter scale:
+
+``impl="einsum"`` — the ARRAY representation (paper Section 5): the
+    assignment is materialised per token-group as a dense one-hot
+    dispatch/combine tensor (g, E, C) and dispatch/combine are einsums
+    (GShard-style). Fully pjit-friendly, but pays O(E·C/k) redundant
+    multiply-adds per token — the array analogue of the paper's join
+    blow-up (Fig. 5): the one-hot matrix materialises every (token, slot)
+    cell even though only k per token are live.
+
+``impl="sort"`` — the RELATIONAL representation (paper Section 4): the
+    assignment stays a sparse relation; dispatch is the *join* (gather rows
+    by token id), the per-expert rank comes from a sort (the paper's §8
+    sort-based aggregation), and combine is the *group-by token, sum* — a
+    segment sum. O(T·k·d) data movement, no redundant FLOPs.
+    ``kernels/moe_dispatch`` + ``kernels/relational_matmul`` are the Pallas
+    twins of the gather and segment-sum.
+
+Tokens are processed in GROUPS (GShard's group dimension): capacity,
+sorting and dispatch are all group-local, so with groups sharded over the
+data axes every device handles its own relation and the only cross-device
+traffic is the expert-parallel all-to-all. Both impls drop overflow beyond
+expert capacity with identical rank-major priority, so their outputs match
+exactly (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cdt, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    n_shared: int = 0         # shared experts (DeepSeek)
+    capacity_factor: float = 1.25
+    router_softmax: str = "pre"   # "pre": softmax→topk (DeepSeek);
+                                  # "post": topk→softmax (DBRX/Mixtral)
+    impl: str = "einsum"
+    group_size: int = 2048
+
+
+def init_moe(key, cfg: MoEConfig):
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": dense_init(ks[0], (d, e)),
+        "wi": dense_init(ks[1], (e, d, f)),
+        "wg": dense_init(ks[2], (e, d, f)),
+        "wo": dense_init(ks[3], (e, f, d)),
+    }
+    if cfg.n_shared:
+        p["shared"] = {
+            "wi": dense_init(ks[4], (d, cfg.n_shared * f)),
+            "wg": dense_init(jax.random.fold_in(ks[4], 1),
+                             (d, cfg.n_shared * f)),
+            "wo": dense_init(jax.random.fold_in(ks[4], 2),
+                             (cfg.n_shared * f, d)),
+        }
+    return p
+
+
+def _route(p, x, cfg: MoEConfig):
+    """Top-k routing over flat tokens. Returns (gates, idx, aux_loss)."""
+    logits = jnp.dot(x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    if cfg.router_softmax == "pre":
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, cfg.top_k)
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    else:
+        top_logits, idx = jax.lax.top_k(logits, cfg.top_k)
+        gates = jax.nn.softmax(top_logits, axis=-1)
+        probs = jax.nn.softmax(logits, axis=-1)
+    # Switch-style load-balancing aux loss (fraction × mean prob).
+    me = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32),
+                axis=-2), axis=tuple(range(idx.ndim - 1)))
+    aux = cfg.n_experts * jnp.sum(me * ce) / cfg.top_k
+    return gates, idx, aux
+
+
+def _capacity(group: int, cfg: MoEConfig) -> int:
+    c = int(group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _expert_ffn(p, xs):
+    """xs: (..., E, C, d) → SwiGLU per expert."""
+    h = jnp.einsum("...ecd,edf->...ecf", xs, cdt(p["wi"]))
+    g = jnp.einsum("...ecd,edf->...ecf", xs, cdt(p["wg"]))
+    return jnp.einsum("...ecf,efd->...ecd", h * jax.nn.silu(g),
+                      cdt(p["wo"]))
+
+
+# ---------------------------------------------------------------------------
+# array representation: dense one-hot dispatch/combine (GShard), grouped
+# ---------------------------------------------------------------------------
+
+def _moe_einsum(p, xg, cfg: MoEConfig, gates, idx):
+    """xg: (G, g, d); gates/idx: (G, g, k)."""
+    _, g, d = xg.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(g, cfg)
+    pos_offset = jnp.zeros(idx.shape[:1] + (e,), jnp.int32)     # (G, E)
+    dispatch = None
+    combine = None
+    for r in range(k):
+        mask_r = jax.nn.one_hot(idx[..., r], e, dtype=jnp.int32)  # (G,g,E)
+        pos_r = jnp.cumsum(mask_r, axis=1) - 1 + pos_offset[:, None]
+        pos_offset = pos_offset + jnp.sum(mask_r, axis=1)
+        pos_tok = jnp.sum(mask_r * pos_r, axis=-1)                # (G, g)
+        keep = pos_tok < cap
+        oh_pos = jax.nn.one_hot(jnp.where(keep, pos_tok, cap), cap,
+                                dtype=jnp.float32)                # (G,g,C)
+        d_r = mask_r.astype(jnp.float32)[..., :, None] * oh_pos[..., None, :]
+        dispatch = d_r if dispatch is None else dispatch + d_r
+        combine = (d_r * gates[..., r][..., None, None]
+                   if combine is None
+                   else combine + d_r * gates[..., r][..., None, None])
+    xs = jnp.einsum("gsec,gsd->gecd", dispatch.astype(xg.dtype), xg)
+    ys = _expert_ffn(p, xs)
+    return jnp.einsum("gsec,gecd->gsd", combine.astype(xg.dtype), ys)
+
+
+# ---------------------------------------------------------------------------
+# relational representation: sort (join) + segment sum (group-by), grouped
+# ---------------------------------------------------------------------------
+
+def _moe_sort_one(p, x, cfg: MoEConfig, gates, idx):
+    """x: (g, d); gates/idx: (g, k) — one group's relation."""
+    g, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(g, cfg)
+    # the relation, rank-major to match the einsum path's drop priority
+    expert_s = idx.T.reshape(-1)                    # (S,) S = k·g
+    token_s = jnp.tile(jnp.arange(g, dtype=jnp.int32), k)
+    gate_s = gates.T.reshape(-1)
+    order = jnp.argsort(expert_s, stable=True)      # sort-based aggregation
+    expert_sorted = expert_s[order]
+    token_sorted = token_s[order]
+    gate_sorted = gate_s[order]
+    counts = jnp.bincount(expert_s, length=e)
+    seg_start = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                 jnp.cumsum(counts)[:-1]])
+    pos_sorted = (jnp.arange(k * g, dtype=jnp.int32)
+                  - seg_start[expert_sorted])
+    keep = pos_sorted < cap
+    # JOIN: gather token rows; scatter into per-expert capacity buckets
+    xs_slots = x[token_sorted]
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[expert_sorted, jnp.where(keep, pos_sorted, cap)].add(
+        xs_slots, mode="drop")
+    ys = _expert_ffn(p, buf)
+    # gather back per slot; GROUP BY token, SUM (segment sum)
+    y_slots = ys[expert_sorted, pos_sorted] * keep[:, None]
+    weighted = y_slots.astype(jnp.float32) * gate_sorted[:, None]
+    out = jax.ops.segment_sum(weighted, token_sorted, num_segments=g)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# relational representation with ENGINE SUPPORT: shard_map expert-owner plan
+# ---------------------------------------------------------------------------
+# The paper's conclusion — the relational representation needs engine
+# support (sort-based aggregation, §8) — repeats at cluster scale: under
+# pure GSPMD the sort/scatter plan communicates *more* than the one-hot
+# einsum (measured, EXPERIMENTS.md §Perf). shard_map is that engine
+# support: each (data, model) device routes its token shard, fills
+# capacity buckets ONLY for the experts it owns, runs the local expert
+# GEMMs, and partial-combines; a single psum over 'model' replaces both
+# the dispatch all-to-all and the one-hot einsums.
+
+_SHARD_CTX: dict = {"mesh": None, "dp": None}
+
+
+def set_moe_mesh(mesh, dp_axes):
+    """Install the mesh for impl='shard' (dryrun/trainer call this)."""
+    _SHARD_CTX["mesh"] = mesh
+    _SHARD_CTX["dp"] = dp_axes
+
+
+def _moe_sort_local(p_wi, p_wg, p_wo, x, cfg, gates, idx, e_lo, e_loc,
+                    cap):
+    """Bucket-fill + expert GEMM + combine for the local expert range
+    [e_lo, e_lo + e_loc). Slots outside the range drop like non-matching
+    join tuples."""
+    g, d = x.shape
+    k = cfg.top_k
+    expert_s = idx.T.reshape(-1) - e_lo
+    token_s = jnp.tile(jnp.arange(g, dtype=jnp.int32), k)
+    gate_s = gates.T.reshape(-1)
+    owned = (expert_s >= 0) & (expert_s < e_loc)
+    expert_s = jnp.where(owned, expert_s, e_loc)        # park in drop bucket
+    order = jnp.argsort(expert_s, stable=True)
+    expert_sorted = expert_s[order]
+    token_sorted = token_s[order]
+    gate_sorted = jnp.where(owned[order], gate_s[order], 0.0)
+    counts = jnp.bincount(expert_s, length=e_loc + 1)
+    seg_start = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                 jnp.cumsum(counts)[:-1]])
+    pos_sorted = (jnp.arange(k * g, dtype=jnp.int32)
+                  - seg_start[expert_sorted])
+    keep = (pos_sorted < cap) & (expert_sorted < e_loc)
+    xs_slots = x[token_sorted]
+    buf = jnp.zeros((e_loc, cap, d), x.dtype)
+    buf = buf.at[jnp.where(keep, expert_sorted, e_loc),
+                 jnp.where(keep, pos_sorted, cap)].add(xs_slots,
+                                                       mode="drop")
+    h = jnp.einsum("ecd,edf->ecf", buf, cdt(p_wi))
+    gt = jnp.einsum("ecd,edf->ecf", buf, cdt(p_wg))
+    ys = jnp.einsum("ecf,efd->ecd", h * jax.nn.silu(gt), cdt(p_wo))
+    y_slots = ys[jnp.where(keep, expert_sorted, 0),
+                 jnp.where(keep, pos_sorted, 0)] * keep[:, None]
+    weighted = y_slots.astype(jnp.float32) * gate_sorted[:, None]
+    out = jax.ops.segment_sum(weighted, token_sorted, num_segments=g)
+    return out.astype(x.dtype)
+
+
+def _moe_shard(p, x, cfg: MoEConfig):
+    """shard_map expert-owner execution. x: (T, d) flat tokens."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh, dp = _SHARD_CTX["mesh"], _SHARD_CTX["dp"]
+    mp = mesh.shape["model"]
+    e_loc = cfg.n_experts // mp
+    t = x.shape[0]
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    t_loc = t // dp_n if t % dp_n == 0 else t
+    cap = _capacity(t_loc, cfg)
+
+    def local(x_loc, router, wi, wg, wo):
+        gates, idx, _ = _route({"router": router}, x_loc, cfg)
+        e_lo = jax.lax.axis_index("model") * e_loc
+        partial = _moe_sort_local(wi, wg, wo, x_loc, cfg, gates, idx,
+                                  e_lo, e_loc, cap)
+        return jax.lax.psum(partial, "model")
+
+    x_spec = P(dp, None) if t % dp_n == 0 else P(None, None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(x_spec, P(), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=x_spec)(x, p["router"], p["wi"], p["wg"], p["wo"])
+
+
+def moe_ffn(p, x, cfg: MoEConfig):
+    """x: (T, d) flat tokens → (out (T, d), aux_loss)."""
+    t, d = x.shape
+    g = min(cfg.group_size, t)
+    if t % g:
+        g = t                                        # tiny/odd batches
+    xg = x.reshape(t // g, g, d)
+    gates, idx, aux = _route(p, xg, cfg)
+    if cfg.impl == "shard" and _SHARD_CTX["mesh"] is not None:
+        out = _moe_shard(p, x, cfg)
+    elif cfg.impl == "einsum":
+        out = _moe_einsum(p, xg, cfg, gates, idx).reshape(t, d)
+    elif cfg.impl in ("sort", "shard"):              # shard falls back
+        out = jax.vmap(
+            lambda xx, gg, ii: _moe_sort_one(p, xx, cfg, gg, ii)
+        )(xg, gates, idx).reshape(t, d)
+    else:
+        raise ValueError(cfg.impl)
+    if cfg.n_shared:
+        sh = p["shared"]
+        h = jnp.dot(x, cdt(sh["wi"])) * jax.nn.silu(jnp.dot(x, cdt(sh["wg"])))
+        out = out + jnp.dot(h, cdt(sh["wo"]))
+    return out, aux

@@ -1,0 +1,3 @@
+"""Optimizers + gradient compression."""
+from .optimizers import Optimizer, adamw, clip_by_global_norm, global_norm, sgd
+from . import compression

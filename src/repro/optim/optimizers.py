@@ -1,0 +1,91 @@
+"""Optimizers (pure-JAX, optax-free): SGD (the paper's) and AdamW.
+
+Interface: ``opt.init(params) → state``; ``opt.update(grads, state, params)
+→ (new_params, new_state)``. All update math is elementwise, so GSPMD
+shards the optimizer step exactly like the parameters (ZeRO-style when
+params are data-sharded — see launch/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def sgd(lr: float) -> Optimizer:
+    """Plain gradient descent — Listing 1/7/10's ``w - γ·d_w``."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          mixed_precision: bool = False) -> Optimizer:
+    """AdamW. With ``mixed_precision`` the optimizer carries f32 MASTER
+    weights and the (bf16) params are re-cast from them each step — the
+    standard low-precision-parameter scheme: collectives and forward reads
+    move bf16, optimizer math stays exact."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        st = {"m": jax.tree.map(zeros, params),
+              "v": jax.tree.map(zeros, params),
+              "t": jnp.zeros((), jnp.int32)}
+        if mixed_precision:
+            st["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return st
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        b1t = 1.0 - b1 ** t.astype(jnp.float32)
+        b2t = 1.0 - b2 ** t.astype(jnp.float32)
+        masters = state.get("master", params)
+
+        def upd(p, mast, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / b1t) / (jnp.sqrt(v / b2t) + eps)
+            new_mast = mast.astype(jnp.float32) - lr * (
+                step + weight_decay * mast.astype(jnp.float32))
+            return new_mast.astype(p.dtype), m, v, new_mast
+
+        out = jax.tree.map(upd, params, masters, grads, state["m"],
+                           state["v"])
+        pick = lambda i: jax.tree.map(
+            lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": pick(1), "v": pick(2), "t": t}
+        if mixed_precision:
+            new_state["master"] = pick(3)
+        return pick(0), new_state
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

@@ -1,0 +1,2 @@
+"""Batched serving engine with continuous batching."""
+from .engine import Request, ServingEngine

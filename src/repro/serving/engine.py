@@ -1,0 +1,111 @@
+"""Batched serving engine: prefill + decode with continuous batching.
+
+Model inference is the paper's second workload (§6.3.2: "inference alone is
+worthful inside a database system to avoid data extraction"). The engine
+serves a fixed decode batch of slots; finished sequences release their slot
+to queued requests (continuous batching). Decode shapes are static —
+(B, 1) token + fixed-capacity cache — so one compiled ``decode_step``
+serves every request mix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model, params, max_len: int, batch_slots: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.slots = batch_slots
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: deque[Request] = deque()
+        self.active: list[Optional[Request]] = [None] * batch_slots
+        self.pos = np.zeros((batch_slots,), np.int32)
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.cur_token = np.zeros((batch_slots, 1), np.int32)
+        self._decode = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------- requests
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self.active[slot] = req
+                # per-slot prefill: feed prompt tokens through decode_step
+                # (single compiled path; a bulk prefill() is used by the
+                # benchmark harness where the whole batch arrives at once)
+                for i, tok in enumerate(req.prompt):
+                    logits, self.cache = self._decode(
+                        self.params,
+                        self._slot_batch(slot, int(tok)),
+                        self.cache, jnp.int32(i))
+                self.pos[slot] = len(req.prompt)
+                nxt = self._sample(logits[slot, 0])
+                req.generated.append(int(nxt))
+                self.cur_token[slot, 0] = int(nxt)
+
+    def _slot_batch(self, slot: int, tok: int) -> dict:
+        t = self.cur_token.copy()
+        t[slot, 0] = tok
+        return {"tokens": jnp.asarray(t)}
+
+    def _sample(self, logits) -> int:
+        if self.temperature == 0.0:
+            return int(jnp.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, logits / self.temperature))
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> list[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return []
+        pos = int(max(self.pos[s] for s, r in enumerate(self.active)
+                      if r is not None))
+        logits, self.cache = self._decode(
+            self.params, {"tokens": jnp.asarray(self.cur_token)},
+            self.cache, jnp.int32(pos))
+        finished = []
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            nxt = self._sample(logits[slot, 0])
+            req.generated.append(nxt)
+            self.pos[slot] += 1
+            self.cur_token[slot, 0] = nxt
+            if (len(req.generated) >= req.max_new_tokens
+                    or self.pos[slot] >= self.max_len - 1):
+                req.done = True
+                finished.append(req)
+                self.active[slot] = None
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.queue and all(r is None for r in self.active):
+                break
+        return out

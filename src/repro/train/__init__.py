@@ -1,0 +1,2 @@
+"""Training loop + fault tolerance."""
+from .trainer import StragglerMonitor, Trainer, make_train_step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
+# benchmarks must see the single real CPU device (the 512-device mesh is
+# exclusively the dry-run's, launched as its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,98 @@
+"""SQL transpiler golden tests against the paper's listings' structure."""
+import numpy as np
+
+from repro.core import nn2sql, sqlgen
+from repro.core import expr as E
+from repro.core.autodiff import derive
+
+
+def graph():
+    return nn2sql.build_graph(nn2sql.MLPSpec(150, 4, 20, 3))
+
+
+class TestBuildingBlocks:
+    """Listing 4: matmul / hadamard / sigmoid / transpose renderings."""
+
+    def test_matmul_is_join_groupby(self):
+        m = E.var("m", (3, 4))
+        n = E.var("n", (4, 5))
+        sql = sqlgen.to_sql92([E.matmul(m, n, name="mm")])
+        assert "sum(m.v*n.v)" in sql
+        assert "inner join n as n on m.j = n.i" in sql
+        assert "group by m.i, n.j" in sql
+
+    def test_hadamard_is_two_index_join(self):
+        m, n = E.var("m", (3, 4)), E.var("n", (3, 4))
+        sql = sqlgen.to_sql92([E.hadamard(m, n, name="h")])
+        assert "on m.i = n.i and m.j = n.j" in sql
+
+    def test_sigmoid_is_select_map(self):
+        sql = sqlgen.to_sql92([E.sigmoid(E.var("m", (2, 2)), name="s")])
+        assert "1/(1+exp(-v))" in sql
+
+    def test_transpose_is_index_rename(self):
+        sql = sqlgen.to_sql92([E.transpose(E.var("m", (2, 3)), name="t")])
+        assert "select j as i, i as j, v from m" in sql
+
+
+class TestTrainingQuery:
+    """Listing 7: the recursive training CTE."""
+
+    def test_structure(self):
+        sql = sqlgen.training_query_sql92(graph(), n_iters=20, lr=0.01)
+        assert sql.startswith("with recursive w (iter, id, i, j, v) as (")
+        # base case unions both weight tables with ids 0/1
+        assert "select 0, 0, * from w_xh_init union all" in sql
+        assert "select 0, 1, * from w_ho_init" in sql
+        # recursive reference only once (PostgreSQL restriction, cf. paper)
+        assert sql.count("from w\n") + sql.count("from w ") == 1
+        # the forward CTEs appear, reusing cached a_xh / a_ho
+        for cte in ("a_xh", "a_ho", "z_xh", "z_ho"):
+            assert f"{cte}(i, j, v) as (" in sql
+        # weight update: w - γ·d_w with join on id/i/j
+        assert "w_.v - 0.01 * d_w.v" in sql
+        assert "w_.iter < 20" in sql
+
+    def test_sigmoid_derivative_uses_cached_cte(self):
+        """Eq. 7/9: sig' from the cached output CTE, v*(1-v)."""
+        sql = sqlgen.training_query_sql92(graph(), 10, 0.01)
+        assert "v*(1-v)" in sql
+
+    def test_executable_shape(self):
+        # every '(' balances — cheap syntactic sanity for the generator
+        sql = sqlgen.training_query_sql92(graph(), 5, 0.01)
+        assert sql.count("(") == sql.count(")")
+        assert sql.rstrip().endswith("select * from w;")
+
+
+class TestArrayQuery:
+    """Listing 10: SQL + Arrays rendering."""
+
+    def test_operators(self):
+        g = graph()
+        sql = sqlgen.training_query_arrays(g, n_iters=20, lr=0.01)
+        assert "with recursive w (id, w_xh, w_ho) as (" in sql
+        assert "**" in sql                       # matmul operator
+        assert "transpose(" in sql
+        assert "sig(" in sql
+        assert "id < 20" in sql
+        assert sql.count("(") == sql.count(")")
+
+    def test_gradient_expression_matches_eq10_11(self):
+        g = graph()
+        sql = sqlgen.training_query_arrays(g, 20, 0.01)
+        # Eq. 11: transpose(img) ** d_xh, where sig' reuses the cached
+        # forward expression: (a_xh * (1 - a_xh))
+        assert "transpose(img)" in sql
+        assert "(a_xh * (1 - a_xh))" in sql
+        assert "(a_ho * (1 - a_ho))" in sql
+        assert "transpose(w_ho)" in sql              # Eq. 8
+
+
+class TestForwardInference:
+    def test_inference_query(self):
+        g = graph()
+        sql = sqlgen.to_sql92([g.a_ho])
+        assert "from img" in sql and "group by" in sql
+        np = sqlgen.to_sql_arrays([g.a_ho])
+        assert "sig((a_xh ** w_ho))" in np or "sig" in np

@@ -1,0 +1,99 @@
+"""Benchmark: in-database backend vs the JAX engines (paper Fig. 4/5 axis).
+
+Measures, per backend, (a) one forward+gradient evaluation and (b) the full
+N-iteration training loop of the Section-2.2 MLP:
+
+* ``dense``       — Engine("dense"), jit + lax.scan
+* ``relational``  — Engine("relational"), jit + lax.scan
+* ``sql``         — SQLEngine on sqlite (and duckdb when installed):
+                    recursive-CTE training query + stepped Listing-7
+
+Run:  PYTHONPATH=src python benchmarks/bench_db_backend.py [--rows 60]
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import Engine, nn2sql, sgd_step_fn
+from repro.db import HAVE_DUCKDB
+from repro.db.train import train_in_db
+
+
+def wall(fn, iters=3):
+    fn()  # warm (jit compile / SQL render)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=60)
+    ap.add_argument("--hidden", type=int, default=10)
+    ap.add_argument("--iters", type=int, default=10)
+    args = ap.parse_args()
+
+    spec = nn2sql.MLPSpec(n_rows=args.rows, n_features=4,
+                          n_hidden=args.hidden, n_classes=3, lr=0.05)
+    g = nn2sql.build_graph(spec)
+    w0 = {k: np.asarray(v) for k, v in nn2sql.init_weights(spec).items()}
+    rng = np.random.RandomState(0)
+    x = rng.rand(spec.n_rows, 4).astype(np.float32)
+    y = np.eye(3, dtype=np.float32)[rng.randint(0, 3, spec.n_rows)]
+    jenv = {"img": jnp.asarray(x), "one_hot": jnp.asarray(y)}
+    jw = {k: jnp.asarray(v) for k, v in w0.items()}
+
+    rows = []
+
+    # -- one forward+gradient evaluation -------------------------------------
+    for kind in ("dense", "relational", "sql"):
+        eng = Engine(kind)
+        vg = eng.value_and_grad_fn(g.loss, [g.w_xh, g.w_ho])
+        if kind == "sql":
+            env = {**w0, "img": x, "one_hot": y}
+            t = wall(lambda: vg(env))
+        else:
+            env = {**jw, **jenv}
+            t = wall(lambda: jax.block_until_ready(vg(env)))
+        rows.append((f"value_and_grad[{kind}]", t))
+
+    # -- full training loop ---------------------------------------------------
+    def jax_loop(kind):
+        eng = Engine(kind)
+        step = sgd_step_fn(g.loss, [g.w_xh, g.w_ho], spec.lr, eng)
+
+        def run():
+            w = jw
+            for _ in range(args.iters):
+                w, l = step(w, jenv)
+            jax.block_until_ready(w)
+        return run
+
+    rows.append((f"train[dense, {args.iters} it]", wall(jax_loop("dense"))))
+    rows.append((f"train[relational, {args.iters} it]",
+                 wall(jax_loop("relational"))))
+    rows.append((f"train[sqlite recursive-CTE, {args.iters} it]",
+                 wall(lambda: train_in_db(g, w0, x, y, args.iters))))
+    rows.append((f"train[sqlite stepped Listing-7, {args.iters} it]",
+                 wall(lambda: train_in_db(g, w0, x, y, args.iters,
+                                          strategy="stepped"))))
+    if HAVE_DUCKDB:  # pragma: no cover - needs the [db] extra
+        rows.append((f"train[duckdb Listing-7, {args.iters} it]",
+                     wall(lambda: train_in_db(g, w0, x, y, args.iters,
+                                              backend="duckdb"))))
+
+    print(f"\nMLP {spec.n_rows}x{spec.n_features}"
+          f" h={spec.n_hidden} c={spec.n_classes}")
+    print(f"{'benchmark':46s} {'median ms':>10s}")
+    for name, t in rows:
+        print(f"{name:46s} {t * 1e3:10.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,11 +7,11 @@ SQL transpiler.
 """
 from . import autodiff, dense, expr, nn2sql, rel_engine, relational, sqlgen
 from .engine import Engine, sgd_step_fn
-from .recursive_cte import history_bytes, recursive_cte
+from .recursive_cte import history_bytes, recursive_cte, recursive_cte_py
 from .relational import RelTensor, one_hot, one_hot_dense
 
 __all__ = [
     "autodiff", "dense", "expr", "nn2sql", "rel_engine", "relational",
-    "sqlgen", "Engine", "sgd_step_fn", "recursive_cte", "history_bytes",
-    "RelTensor", "one_hot", "one_hot_dense",
+    "sqlgen", "Engine", "sgd_step_fn", "recursive_cte", "recursive_cte_py",
+    "history_bytes", "RelTensor", "one_hot", "one_hot_dense",
 ]

@@ -50,6 +50,22 @@ def recursive_cte(base: T, step: Callable[[T, int], T], n_iters: int,
     return final, None
 
 
+def recursive_cte_py(base: T, step: Callable[[T, int], T], n_iters: int,
+                     materialize_history: bool = False):
+    """Pure-Python twin of :func:`recursive_cte` for steps that are not
+    jax-traceable — e.g. the in-database backend, where each step issues an
+    ``INSERT INTO w … SELECT`` (``repro.db.train`` strategy "stepped") and
+    the database holds the state.  Same contract: ``(final, history)``,
+    ``history`` includes the base iterate or is ``None``."""
+    state = base
+    hist = [base] if materialize_history else None
+    for it in range(n_iters):
+        state = step(state, it)
+        if materialize_history:
+            hist.append(state)
+    return state, hist
+
+
 def history_bytes(tree, n_iters: int) -> int:
     """Memory the UNION-ALL table reaches after ``n_iters`` recursions."""
     per_iter = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

@@ -9,10 +9,17 @@ the same DAG the JAX engines execute is rendered as
 * **SQL-92** — one CTE per node using the relational representation
   (Listing 4 building blocks, Listing 7 training query), and
 * **SQL + Arrays** — the nested-subquery style over an array data type
-  (Listing 10), with ``**`` matmul, ``*`` Hadamard, ``transpose``, ``sig``.
+  (Listing 10), with ``**`` matmul, ``*`` Hadamard, ``transpose``, ``sig``,
+  plus a function-call rendering (``mm``/``mhad``/``msig`` …) over the UDF
+  array extension that :mod:`repro.db.dialect` installs on sqlite/duckdb.
 
-Generated queries are golden-tested against the paper's listings' structure
-in ``tests/test_sqlgen.py``.
+Rendering is **dialect-aware**: every generator takes an optional
+``dialect`` (name or :class:`repro.db.dialect.Sql92Dialect` instance) that
+decides how constant matrices (``generate_series`` vs. an emulated
+recursive series) and map functions are spelled.  The default dialect is
+the paper's verbatim SQL-92, golden-tested in ``tests/test_sqlgen.py``;
+the ``sqlite`` / ``duckdb`` dialects make the output *executable* — see
+:mod:`repro.db.sql_engine` and :mod:`repro.db.train`.
 """
 from __future__ import annotations
 
@@ -20,11 +27,18 @@ from . import expr as E
 from .autodiff import MapDeriv, derive
 
 
+def _get_dialect(dialect):
+    """Resolve a dialect lazily (keeps ``core`` importable without ``db``)."""
+    from ..db.dialect import Sql92Dialect, get_dialect
+
+    return Sql92Dialect() if dialect is None else get_dialect(dialect)
+
+
 # ---------------------------------------------------------------------------
 # SQL-92: relational representation
 # ---------------------------------------------------------------------------
 
-def _cte_sql(node: E.Expr, nm: dict[int, str]) -> str:
+def _cte_sql(node: E.Expr, nm: dict[int, str], dialect) -> str:
     """Render one node as a select over its children's CTEs (Listing 4)."""
     n = lambda c: nm[id(c)]
     if isinstance(node, E.MatMul):
@@ -50,36 +64,64 @@ def _cte_sql(node: E.Expr, nm: dict[int, str]) -> str:
                     f" from {n(node.x)}")
         raise NotImplementedError(node.fn.name)
     if isinstance(node, E.Map):
-        return f"select i, j, {node.fn.sql('v')} as v from {n(node.x)}"
+        return f"select i, j, {dialect.map_sql(node.fn, 'v')} as v from {n(node.x)}"
     if isinstance(node, E.Const):
         rows, cols = node.shape
-        return (f"select a.i, b.j, {node.value} as v\n"
-                f"  from (select generate_series as i from"
-                f" generate_series(1,{rows})) a,\n"
-                f"       (select generate_series as j from"
-                f" generate_series(1,{cols})) b")
+        return dialect.const_select(rows, cols, node.value)
     raise TypeError(type(node))
 
 
-def to_sql92(roots: list[E.Expr], select: str | None = None) -> str:
-    """Emit a WITH query: one CTE per non-leaf node, topologically ordered."""
-    order = E.topo_order(*roots)
+def _with_keyword(dialect, recursive: bool = False) -> str:
+    """``with`` / ``with recursive`` as the dialect requires.  sqlite's
+    emulated series CTEs make the whole statement recursive."""
+    return "with recursive" if (recursive or dialect.series_is_recursive) \
+        else "with"
+
+
+def render_ctes(roots: list[E.Expr], dialect=None
+                ) -> tuple[list[str], dict[int, str]]:
+    """One CTE string per non-leaf node, topologically ordered, plus the
+    id→name map used to reference any node (Vars map to their table name)."""
+    dialect = _get_dialect(dialect)
     nm: dict[int, str] = {}
     ctes: list[str] = []
-    for node in order:
-        if isinstance(node, E.Var):
-            nm[id(node)] = node.name
-            continue
+    for node in E.topo_order(*roots):
         nm[id(node)] = node.name
-        ctes.append(f"{node.name}(i, j, v) as (\n  {_cte_sql(node, nm)}\n)")
-    body = ",\n".join(ctes)
+        if not isinstance(node, E.Var):
+            ctes.append(
+                f"{node.name}(i, j, v) as (\n  {_cte_sql(node, nm, dialect)}\n)")
+    return ctes, nm
+
+
+def to_sql92(roots: list[E.Expr], select: str | None = None,
+             dialect=None) -> str:
+    """Emit a WITH query: one CTE per non-leaf node, topologically ordered."""
+    dialect = _get_dialect(dialect)
+    ctes, nm = render_ctes(roots, dialect)
     tail = select or f"select * from {nm[id(roots[-1])]} order by i, j"
-    return f"with {body}\n{tail};"
+    if not ctes:  # every root is a stored table
+        return f"{tail};"
+    body = ",\n".join(ctes)
+    return f"{_with_keyword(dialect)} {body}\n{tail};"
 
 
-def training_query_sql92(graph, n_iters: int, lr: float) -> str:
-    """Listing 7: the recursive CTE whose step evaluates the model, runs
-    Algorithm 1's CTEs, and emits the updated weight table."""
+def multi_root_select(roots: list[E.Expr]) -> str:
+    """A union-all tail tagging each root's tuples with its position — lets
+    one statement return every output of a multi-root DAG (loss + grads).
+    Each root is addressed by its own name (its CTE, or its table if a
+    Var)."""
+    return "\nunion all ".join(
+        f"select {k} as r, i, j, v from {r.name}"
+        for k, r in enumerate(roots))
+
+
+def _training_step_parts(graph, lr: float, dialect,
+                         iter_guard: str | None = None
+                         ) -> tuple[list[str], str]:
+    """The shared body of one Listing-7 gradient step: the forward/backward
+    CTEs (weights read from ``w_``) and the weight-update select.  Used by
+    both the recursive training query and the stepped INSERT…SELECT
+    execution (:func:`training_step_sql92`)."""
     grads = derive(graph.loss, E.const(1.0, graph.loss.shape))
     g_xh, g_ho = grads[graph.w_xh], grads[graph.w_ho]
     order = E.topo_order(graph.loss, g_xh, g_ho)
@@ -98,7 +140,34 @@ def training_query_sql92(graph, n_iters: int, lr: float) -> str:
                 nm[id(node)] = node.name
             continue
         nm[id(node)] = node.name
-        ctes.append(f"{node.name}(i, j, v) as (\n  {_cte_sql(node, nm)}\n)")
+        ctes.append(f"{node.name}(i, j, v) as (\n  {_cte_sql(node, nm, dialect)}\n)")
+    ctes.append(
+        "d_w(id, i, j, v) as (\n"
+        f"    select 0, i, j, v from {nm[id(g_xh)]} union all\n"
+        f"    select 1, i, j, v from {nm[id(g_ho)]}\n"
+        "  )")
+    guard = f"\n   where {iter_guard}" if iter_guard else "\n   where 1 = 1"
+    update = (
+        "select w_.iter + 1, w_.id, w_.i, w_.j,\n"
+        f"         w_.v - {lr} * d_w.v\n"
+        "    from w_, d_w"
+        f"{guard} and w_.id = d_w.id\n"
+        "     and w_.i = d_w.i and w_.j = d_w.j")
+    return ctes, update
+
+
+def training_query_sql92(graph, n_iters: int, lr: float, dialect=None) -> str:
+    """Listing 7: the recursive CTE whose step evaluates the model, runs
+    Algorithm 1's CTEs, and emits the updated weight table.
+
+    Note: sqlite cannot execute this shape (the recursive table appears
+    inside a nested WITH — ``dialect.supports_listing7``); there the
+    training loop runs :func:`training_query_array_calls` or the stepped
+    :func:`training_step_sql92` instead.
+    """
+    dialect = _get_dialect(dialect)
+    ctes, update = _training_step_parts(graph, lr, dialect,
+                                        iter_guard=f"w_.iter < {n_iters}")
     body = ",\n".join(ctes)
     return (
         "with recursive w (iter, id, i, j, v) as (\n"
@@ -108,18 +177,27 @@ def training_query_sql92(graph, n_iters: int, lr: float) -> str:
         "  select * from (\n"
         "  with w_(iter, id, i, j, v) as (\n"
         "    select * from w  -- recursive reference only allowed once\n"
-        f"  ),\n{body},\n"
-        "  d_w(id, i, j, v) as (\n"
-        f"    select 0, i, j, v from {nm[id(g_xh)]} union all\n"
-        f"    select 1, i, j, v from {nm[id(g_ho)]}\n"
-        "  )\n"
-        "  select w_.iter + 1, w_.id, w_.i, w_.j,\n"
-        f"         w_.v - {lr} * d_w.v\n"
-        "    from w_, d_w\n"
-        f"   where w_.iter < {n_iters} and w_.id = d_w.id\n"
-        "     and w_.i = d_w.i and w_.j = d_w.j\n"
+        f"  ),\n{body}\n"
+        f"  {update}\n"
         "  ) step\n"
         ")\nselect * from w;")
+
+
+def training_step_sql92(graph, lr: float, dialect=None,
+                        weights_table: str = "w") -> str:
+    """One Listing-7 step as ``INSERT INTO w … SELECT``: reads the latest
+    weight version from the history table, appends the updated one.  This is
+    the recursive step *materialised* — semantically the body of Listing 7's
+    recursion, executable on engines (sqlite) whose recursive CTEs cannot
+    re-read the whole previous weight table."""
+    dialect = _get_dialect(dialect)
+    ctes, update = _training_step_parts(graph, lr, dialect)
+    w_ = (f"w_(iter, id, i, j, v) as (\n"
+          f"  select iter, id, i, j, v from {weights_table}\n"
+          f"   where iter = (select max(iter) from {weights_table})\n)")
+    body = ",\n".join([w_] + ctes)
+    return (f"{_with_keyword(dialect, recursive=True)} {body}\n"
+            f"insert into {weights_table}\n{update};")
 
 
 # ---------------------------------------------------------------------------
@@ -214,3 +292,80 @@ def training_query_arrays(graph, n_iters: int, lr: float) -> str:
         f"         w_ho - {lr} * {g_ho.name}\n"
         f"    from (\n{inner})\n"
         ")\nselect * from w;")
+
+
+# ---------------------------------------------------------------------------
+# SQL + Arrays, function-call rendering (executable UDF array extension)
+# ---------------------------------------------------------------------------
+
+def array_call_expr(node: E.Expr, leaf) -> str:
+    """Render a DAG as nested calls over the UDF array extension
+    (:data:`repro.db.dialect.ARRAY_UDFS`).  ``leaf(name)`` maps a Var to a
+    column reference (e.g. ``w_xh`` → ``w.w_xh``).
+
+    Unlike the CTE renderings this *inlines* shared subexpressions — the
+    price of sqlite's recursive-select restrictions, which forbid the
+    derived-table levels Listing 10 uses for reuse.
+    """
+    a = lambda n: array_call_expr(n, leaf)
+    if isinstance(node, E.Var):
+        return leaf(node.name)
+    if isinstance(node, E.Const):
+        r, c = node.shape
+        return f"mconst({r},{c},{node.value})"
+    if isinstance(node, E.MatMul):
+        return f"mm({a(node.x)}, {a(node.y)})"
+    if isinstance(node, E.Hadamard):
+        return f"mhad({a(node.x)}, {a(node.y)})"
+    if isinstance(node, E.Add):
+        return f"madd({a(node.x)}, {a(node.y)})"
+    if isinstance(node, E.Sub):
+        return f"msub({a(node.x)}, {a(node.y)})"
+    if isinstance(node, E.Scale):
+        return f"mscale({node.c}, {a(node.x)})"
+    if isinstance(node, E.Transpose):
+        return f"mt({a(node.x)})"
+    if isinstance(node, MapDeriv):
+        if node.fn is E.SIGMOID:      # out·(1-out) from the cached output
+            return f"msigd({a(node.fx)})"
+        if node.fn is E.SQUARE:
+            return f"msqrd({a(node.x)})"
+        if node.fn is E.RELU:
+            return f"mrelud({a(node.x)})"
+        if node.fn is E.ONE_MINUS:
+            r, c = node.shape
+            return f"mconst({r},{c},-1.0)"
+        raise NotImplementedError(node.fn.name)
+    if isinstance(node, E.Map):
+        return f"m{node.fn.name}({a(node.x)})"
+    raise TypeError(type(node))
+
+
+def training_query_array_calls(graph, n_iters: int, lr: float) -> str:
+    """The Listing-10 training recursion in the shape sqlite can execute:
+    the whole weight state is ONE row of array-typed columns, the recursive
+    table appears exactly once in the top-level FROM, and each new weight
+    column is a single inlined expression over the UDF array extension.
+
+    ``weights(w_xh, w_ho)`` and ``data(img, one_hot)`` are single-row tables
+    of JSON-encoded matrices (``repro.db.dialect.matrix_to_json``).
+    """
+    grads = derive(graph.loss, E.const(1.0, graph.loss.shape))
+    g_xh, g_ho = grads[graph.w_xh], grads[graph.w_ho]
+    data_vars = {graph.img.name, graph.one_hot.name}
+
+    def leaf(name: str) -> str:
+        return f"data.{name}" if name in data_vars else f"w.{name}"
+
+    g_xh_sql = array_call_expr(g_xh, leaf)
+    g_ho_sql = array_call_expr(g_ho, leaf)
+    return (
+        "with recursive w (iter, w_xh, w_ho) as (\n"
+        "  select 0, w_xh, w_ho from weights\n"
+        "  union all\n"
+        "  select w.iter + 1,\n"
+        f"         msub(w.w_xh, mscale({lr}, {g_xh_sql})),\n"
+        f"         msub(w.w_ho, mscale({lr}, {g_ho_sql}))\n"
+        "    from w, data\n"
+        f"   where w.iter < {n_iters}\n"
+        ")\nselect iter, w_xh, w_ho from w;")

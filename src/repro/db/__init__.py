@@ -1,0 +1,48 @@
+"""In-database execution backend (the paper's actual thesis, closed-loop).
+
+``repro.db`` runs the generated SQL in a real engine instead of printing it:
+
+* :mod:`~repro.db.dialect` — SQL dialects (sql92 golden, sqlite, duckdb)
+  plus the UDF array extension (the §5 analogue for stock engines);
+* :mod:`~repro.db.adapter` — thin connections over ``sqlite3`` / ``duckdb``;
+* :mod:`~repro.db.relation_io` — dense arrays ↔ ``{[i, j, v]}`` tables;
+* :mod:`~repro.db.sql_engine` — ``SQLEngine``, the ``Engine("sql")`` backend;
+* :mod:`~repro.db.train` — Listing 7/10 training + Listing 8 inference
+  executed inside the database.
+
+Submodules that depend on :mod:`repro.core` are loaded lazily so that
+``core`` ↔ ``db`` imports cannot cycle.
+"""
+from . import adapter, dialect, relation_io
+from .adapter import Adapter, DuckDBAdapter, SQLiteAdapter, connect
+from .dialect import (ARRAY_UDFS, HAVE_DUCKDB, DuckDBDialect, Sql92Dialect,
+                      SqliteDialect, get_dialect, json_to_matrix,
+                      matrix_to_json)
+
+__all__ = [
+    "adapter", "dialect", "relation_io", "sql_engine", "train",
+    "Adapter", "SQLiteAdapter", "DuckDBAdapter", "connect",
+    "Sql92Dialect", "SqliteDialect", "DuckDBDialect", "get_dialect",
+    "ARRAY_UDFS", "HAVE_DUCKDB", "matrix_to_json", "json_to_matrix",
+    "SQLEngine", "train_in_db", "infer_in_db", "predict_in_db",
+]
+
+_LAZY = {
+    "sql_engine": ("repro.db.sql_engine", None),
+    "train": ("repro.db.train", None),
+    "SQLEngine": ("repro.db.sql_engine", "SQLEngine"),
+    "train_in_db": ("repro.db.train", "train_in_db"),
+    "infer_in_db": ("repro.db.train", "infer_in_db"),
+    "predict_in_db": ("repro.db.train", "predict_in_db"),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(name) from None
+    import importlib
+
+    mod = importlib.import_module(mod_name)
+    return getattr(mod, attr) if attr else mod

@@ -1,0 +1,119 @@
+"""Thin connection adapters over the engines the container actually has.
+
+One interface, two implementations:
+
+``SQLiteAdapter`` — stdlib ``sqlite3``; always available, the default.
+``DuckDBAdapter`` — only when the ``duckdb`` package is importable.
+
+An adapter owns a connection plus the matching :mod:`repro.db.dialect`, and
+exposes exactly what the execution backend needs: ``execute`` (rows back),
+``create_table`` and ``bulk_insert``.  Everything else (SQL rendering, array
+pivoting) lives in ``dialect`` / ``relation_io`` so the adapters stay thin.
+"""
+from __future__ import annotations
+
+import re
+import sqlite3
+from typing import Iterable, Sequence
+
+from .dialect import (HAVE_DUCKDB, DuckDBDialect, Sql92Dialect, SqliteDialect,
+                      duckdb)
+
+_IDENT = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
+
+
+def _check_ident(name: str) -> str:
+    if not _IDENT.match(name):
+        raise ValueError(f"bad SQL identifier: {name!r}")
+    return name
+
+
+class Adapter:
+    """Base adapter: a prepared connection + its dialect."""
+
+    dialect: Sql92Dialect
+    placeholder = "?"
+
+    def __init__(self, conn):
+        self.conn = conn
+        self.dialect.prepare(conn)
+
+    # -- statement execution ------------------------------------------------
+    def execute(self, sql: str, params: Sequence = ()) -> list[tuple]:
+        """Run one statement, return all result rows (possibly empty)."""
+        cur = self.conn.execute(sql, tuple(params))
+        try:
+            return cur.fetchall()
+        except Exception:  # statement without a result set
+            return []
+
+    def executemany(self, sql: str, rows: Iterable[Sequence]) -> None:
+        self.conn.executemany(sql, rows)
+
+    # -- schema / data ------------------------------------------------------
+    def create_table(self, name: str, columns: Sequence[tuple[str, str]],
+                     replace: bool = True) -> None:
+        """``columns`` is [(col_name, sql_type), ...]."""
+        _check_ident(name)
+        cols = ", ".join(f"{_check_ident(c)} {t}" for c, t in columns)
+        if replace:
+            self.execute(f"drop table if exists {name}")
+        self.execute(f"create table {name} ({cols})")
+
+    def bulk_insert(self, name: str, rows: Iterable[Sequence]) -> None:
+        rows = list(rows)
+        if not rows:
+            return
+        ph = ", ".join([self.placeholder] * len(rows[0]))
+        self.executemany(f"insert into {_check_ident(name)} values ({ph})",
+                         rows)
+
+    # -- lifecycle ----------------------------------------------------------
+    def commit(self) -> None:
+        self.conn.commit()
+
+    def close(self) -> None:
+        try:  # flush pending inserts — sqlite3 rolls back open transactions
+            self.conn.commit()
+        except Exception:  # pragma: no cover - autocommit engines (duckdb)
+            pass
+        self.conn.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class SQLiteAdapter(Adapter):
+    dialect = SqliteDialect()
+
+    def __init__(self, path: str = ":memory:"):
+        super().__init__(sqlite3.connect(path))
+
+
+class DuckDBAdapter(Adapter):
+    placeholder = "?"
+
+    def __init__(self, path: str = ":memory:"):
+        if not HAVE_DUCKDB:  # pragma: no cover - depends on environment
+            raise ImportError("duckdb is not installed; "
+                              "use backend='sqlite' or pip install repro[db]")
+        self.dialect = DuckDBDialect()
+        super().__init__(duckdb.connect(path))
+
+    def executemany(self, sql, rows):  # pragma: no cover - needs duckdb
+        self.conn.executemany(sql, [tuple(r) for r in rows])
+
+
+def connect(backend: str = "sqlite", path: str = ":memory:") -> Adapter:
+    """Open the requested backend; ``'auto'`` prefers duckdb when present."""
+    if backend == "auto":
+        backend = "duckdb" if HAVE_DUCKDB else "sqlite"
+    if backend == "sqlite":
+        return SQLiteAdapter(path)
+    if backend == "duckdb":
+        return DuckDBAdapter(path)
+    raise ValueError(f"unknown backend {backend!r}; "
+                     "expected 'sqlite', 'duckdb' or 'auto'")

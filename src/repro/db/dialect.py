@@ -1,0 +1,198 @@
+"""SQL dialects for the in-database execution backend.
+
+The transpiler (``core.sqlgen``) renders the expression DAG against a
+*dialect* object so the same generator serves several engines (§6 of the
+paper evaluates DuckDB, HyPer and PostgreSQL; we target what the container
+actually ships):
+
+``Sql92Dialect``
+    The paper's verbatim SQL-92: ``generate_series`` table function,
+    ``exp`` / ``greatest`` builtins.  This is the golden-test dialect — its
+    output matches the listings' structure exactly.
+
+``SqliteDialect``
+    stdlib ``sqlite3``, always available.  Two deviations are needed:
+
+    * ``generate_series`` is a loadable extension sqlite3 does not ship, so
+      constant matrices are built from an inline ``WITH RECURSIVE`` series
+      (the emulation forces the top-level ``WITH`` to say ``RECURSIVE``);
+    * ``exp`` and ``greatest`` are not built in — they are registered as
+      deterministic Python UDFs on every connection (``prepare``).
+
+    SQLite additionally restricts recursive CTEs: the recursive table may
+    appear exactly once, in the *top-level* FROM clause of the recursive
+    select — never inside a subquery ("circular reference") — and recursion
+    is row-at-a-time queue semantics.  Listing 7's relational training query
+    (which re-reads the whole previous weight *table* through a nested WITH)
+    is therefore inexpressible; the training loop instead runs the paper's
+    *array-data-type* variant (Listing 10): the whole weight state rides in
+    ONE row of array-typed columns, and the matrix algebra is provided by
+    registered UDFs over a JSON array encoding — ``create_function`` being
+    sqlite's analogue of the paper's §5 DuckDB array-type extension.
+
+``DuckDBDialect``
+    Used when the ``duckdb`` package is importable (``pip install
+    repro[db]``).  Stock SQL-92 rendering works unchanged (DuckDB has
+    ``generate_series``, ``exp``, ``greatest``), and the Listing 7 / 10
+    training queries are rendered by ``core.sqlgen`` verbatim.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+import numpy as np
+
+from ..core import expr as E
+
+try:  # optional dependency, gated — never required
+    import duckdb  # type: ignore
+
+    HAVE_DUCKDB = True
+except ImportError:  # pragma: no cover - exercised when duckdb is absent
+    duckdb = None
+    HAVE_DUCKDB = False
+
+
+# ---------------------------------------------------------------------------
+# JSON array codec — the "array data type" as sqlite sees it
+# ---------------------------------------------------------------------------
+
+def matrix_to_json(x) -> str:
+    """Encode a matrix as the array data type: row-major values + dims."""
+    a = np.asarray(x, dtype=np.float64)
+    return json.dumps({"r": a.shape[0], "c": a.shape[1],
+                       "d": a.reshape(-1).tolist()})
+
+
+def json_to_matrix(s: str) -> np.ndarray:
+    o = json.loads(s)
+    return np.asarray(o["d"], dtype=np.float64).reshape(o["r"], o["c"])
+
+
+def _wrap2(f):
+    return lambda x, y: matrix_to_json(f(json_to_matrix(x), json_to_matrix(y)))
+
+
+def _wrap1(f):
+    return lambda x: matrix_to_json(f(json_to_matrix(x)))
+
+
+#: name → (nargs, python impl).  These are the matrix operations of the
+#: paper's §5 array extension; ``core.sqlgen.array_call_expr`` (and the
+#: ``training_query_array_calls`` recursion built on it) renders expression
+#: DAGs as nested calls over exactly these names.
+ARRAY_UDFS: dict[str, tuple[int, object]] = {
+    "mm": (2, _wrap2(lambda a, b: a @ b)),
+    "madd": (2, _wrap2(lambda a, b: a + b)),
+    "msub": (2, _wrap2(lambda a, b: a - b)),
+    "mhad": (2, _wrap2(lambda a, b: a * b)),
+    "mscale": (2, lambda c, x: matrix_to_json(c * json_to_matrix(x))),
+    "mt": (1, _wrap1(lambda a: a.T)),
+    "mconst": (3, lambda r, c, v: matrix_to_json(np.full((int(r), int(c)), v))),
+    "mmean": (1, lambda x: float(json_to_matrix(x).mean())),
+    # elementwise maps and their derivatives (Algorithm 1's f / f')
+    "msig": (1, _wrap1(lambda a: 1.0 / (1.0 + np.exp(-a)))),
+    "msigd": (1, _wrap1(lambda a: a * (1.0 - a))),        # from cached f(x)
+    "msqr": (1, _wrap1(lambda a: a * a)),
+    "msqrd": (1, _wrap1(lambda a: 2.0 * a)),
+    "mrelu": (1, _wrap1(lambda a: np.maximum(a, 0.0))),
+    "mrelud": (1, _wrap1(lambda a: (a > 0.0).astype(np.float64))),
+    "mone_minus": (1, _wrap1(lambda a: 1.0 - a)),
+}
+
+
+# ---------------------------------------------------------------------------
+# dialects
+# ---------------------------------------------------------------------------
+
+class Sql92Dialect:
+    """The paper's SQL-92 as written in the listings (golden dialect)."""
+
+    name = "sql92"
+    #: whether constant matrices need the RECURSIVE keyword on the WITH
+    series_is_recursive = False
+
+    # -- scalar rendering ---------------------------------------------------
+    def map_sql(self, fn: E.MapFn, v: str) -> str:
+        """Select-clause rendering of an elementwise function."""
+        return fn.sql(v)
+
+    def series_from(self, n: int, alias: str, col: str) -> str:
+        """A from-clause term yielding the integers 1..n as column ``col``."""
+        return (f"(select generate_series as {col}"
+                f" from generate_series(1,{n})) {alias}")
+
+    def const_select(self, rows: int, cols: int, value: float) -> str:
+        """A constant matrix as the cross join of two series (Listing 5)."""
+        return (f"select a.i, b.j, {value} as v\n"
+                f"  from {self.series_from(rows, 'a', 'i')},\n"
+                f"       {self.series_from(cols, 'b', 'j')}")
+
+    # -- connection preparation --------------------------------------------
+    def prepare(self, conn) -> None:
+        """Install anything the rendered SQL assumes (UDFs etc.)."""
+
+    # -- capability flags ---------------------------------------------------
+    #: can the engine run Listing 7 verbatim (recursive table in a nested
+    #: WITH inside the recursive select)?
+    supports_listing7 = True
+
+
+class SqliteDialect(Sql92Dialect):
+    name = "sqlite"
+    series_is_recursive = True
+    supports_listing7 = False  # "circular reference" — see module docstring
+
+    def series_from(self, n: int, alias: str, col: str) -> str:
+        return (f"(with recursive s(x) as"
+                f" (select 1 union all select x+1 from s where x < {n})"
+                f" select x as {col} from s) {alias}")
+
+    def prepare(self, conn) -> None:
+        conn.create_function("exp", 1, math.exp, deterministic=True)
+        conn.create_function("greatest", 2, max, deterministic=True)
+        for name, (nargs, fn) in ARRAY_UDFS.items():
+            conn.create_function(name, nargs, fn, deterministic=True)
+
+
+class DuckDBDialect(Sql92Dialect):
+    name = "duckdb"
+
+    def prepare(self, conn) -> None:
+        # generate_series / exp / greatest are native; the array UDFs back
+        # the same Listing-10 rendering as sqlite (stock DuckDB has list
+        # types but no matrix operators — the paper used a patched build).
+        # DuckDB's create_function needs explicit types for lambdas.
+        try:  # pragma: no cover - needs the [db] extra
+            from duckdb.typing import DOUBLE, VARCHAR
+            types = {"mscale": ([DOUBLE, VARCHAR], VARCHAR),
+                     "mconst": ([DOUBLE, DOUBLE, DOUBLE], VARCHAR),
+                     "mmean": ([VARCHAR], DOUBLE)}
+        except ImportError:  # pragma: no cover - older duckdb
+            types = {}
+        for name, (nargs, fn) in ARRAY_UDFS.items():  # pragma: no cover
+            params, ret = types.get(name, ([VARCHAR] * nargs, VARCHAR)) \
+                if types else (None, None)
+            try:
+                if params is not None:
+                    conn.create_function(name, fn, params, ret)
+                else:
+                    conn.create_function(name, fn)
+            except Exception:
+                continue  # register what we can; Listing 7 needs none
+
+
+_DIALECTS = {"sql92": Sql92Dialect, "sqlite": SqliteDialect,
+             "duckdb": DuckDBDialect}
+
+
+def get_dialect(name) -> Sql92Dialect:
+    """Dialect registry: by name, or pass through an instance."""
+    if isinstance(name, Sql92Dialect):
+        return name
+    try:
+        return _DIALECTS[name]()
+    except KeyError:
+        raise ValueError(f"unknown dialect {name!r}; "
+                         f"have {sorted(_DIALECTS)}") from None

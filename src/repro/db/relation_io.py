@@ -1,0 +1,90 @@
+"""Pivoting between dense arrays and the relational representation.
+
+The paper stores a matrix as the relation ``{[i, j, v]}`` (Fig. 1) with
+**1-based** indices (``generate_series(1, n)`` in Listing 5); the JAX side
+(:class:`repro.core.relational.RelTensor`) is 0-based.  This module is the
+boundary: every matrix entering the database is pivoted to 1-based tuples,
+everything read back is pivoted to a dense 0-based array.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.relational import RelTensor
+from .adapter import Adapter, _check_ident
+
+#: column layout of every matrix table, matching the paper's Fig. 1
+MATRIX_COLUMNS = (("i", "integer"), ("j", "integer"), ("v", "double precision"))
+
+
+# ---------------------------------------------------------------------------
+# dense ↔ rows
+# ---------------------------------------------------------------------------
+
+def matrix_to_rows(x) -> list[tuple[int, int, float]]:
+    """Dense matrix → canonical row-major ``[(i, j, v)]`` (1-based)."""
+    a = np.asarray(x, dtype=np.float64)
+    if a.ndim != 2:
+        raise ValueError(f"expected a matrix, got shape {a.shape}")
+    return [(i + 1, j + 1, float(a[i, j]))
+            for i in range(a.shape[0]) for j in range(a.shape[1])]
+
+
+def rows_to_matrix(rows, shape: tuple[int, int]) -> np.ndarray:
+    """``[(i, j, v)]`` (1-based, any order, gaps → 0) → dense matrix.
+
+    Missing cells coalesce to 0 — the outer-join semantics of Listing 5's
+    one-hot construction.
+    """
+    out = np.zeros(shape, dtype=np.float64)
+    for i, j, v in rows:
+        out[int(i) - 1, int(j) - 1] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RelTensor ↔ rows (round-trips the JAX relational representation)
+# ---------------------------------------------------------------------------
+
+def reltensor_to_rows(rt: RelTensor) -> list[tuple[int, int, float]]:
+    """Valid tuples only: padding rows (``i == shape[0]``) are dropped, just
+    as the inner join drops them on-device."""
+    i = np.asarray(rt.i)
+    j = np.asarray(rt.j)
+    v = np.asarray(rt.v, dtype=np.float64)
+    keep = i < rt.shape[0]
+    return [(int(a) + 1, int(b) + 1, float(c))
+            for a, b, c in zip(i[keep], j[keep], v[keep])]
+
+
+def rows_to_reltensor(rows, shape: tuple[int, int]) -> RelTensor:
+    """Rows → canonical (dense row-major) RelTensor."""
+    return RelTensor.from_dense(
+        np.asarray(rows_to_matrix(rows, shape), dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# adapter-level matrix tables
+# ---------------------------------------------------------------------------
+
+def write_matrix(adapter: Adapter, name: str, x) -> None:
+    """CREATE + bulk INSERT the relation for ``x`` (replacing any old one)."""
+    adapter.create_table(name, MATRIX_COLUMNS)
+    adapter.bulk_insert(name, matrix_to_rows(x))
+
+
+def read_matrix(adapter: Adapter, name: str,
+                shape: tuple[int, int]) -> np.ndarray:
+    rows = adapter.execute(f"select i, j, v from {_check_ident(name)}")
+    return rows_to_matrix(rows, shape)
+
+
+def write_reltensor(adapter: Adapter, name: str, rt: RelTensor) -> None:
+    adapter.create_table(name, MATRIX_COLUMNS)
+    adapter.bulk_insert(name, reltensor_to_rows(rt))
+
+
+def read_reltensor(adapter: Adapter, name: str,
+                   shape: tuple[int, int]) -> RelTensor:
+    rows = adapter.execute(f"select i, j, v from {_check_ident(name)}")
+    return rows_to_reltensor(rows, shape)

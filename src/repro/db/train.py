@@ -1,0 +1,209 @@
+"""Run the paper's training and inference loops *inside* the database.
+
+Three fully-in-database execution strategies for the Listing 7/10 training
+recursion, picked per engine capability:
+
+``strategy="recursive"`` (default)
+    ONE recursive-CTE query performs every iteration.
+
+    * sqlite — the Listing-10 *array* variant
+      (:func:`repro.core.sqlgen.training_query_array_calls`): weight state
+      rides in one row of array-typed (JSON) columns, matrix algebra comes
+      from the registered UDF array extension.  This is the shape sqlite's
+      recursive-select restrictions admit.
+    * duckdb — Listing 7 verbatim
+      (:func:`repro.core.sqlgen.training_query_sql92`): the relational
+      ``w(iter, id, i, j, v)`` recursion with pure SQL-92 math.
+
+``strategy="stepped"``
+    Listing 7's recursive *step* materialised as ``INSERT INTO w … SELECT``
+    (:func:`repro.core.sqlgen.training_step_sql92`), executed once per
+    iteration — all matrix math still pure SQL-92 inside the engine; only
+    the iteration driver (``recursive_cte_py``) lives outside, exactly the
+    role the recursive CTE plays in Listing 7.  Works on every backend.
+
+Inference (Listing 8/11) runs the forward CTEs in-database, including the
+``highestposition`` rank-1 comparison as a window function.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import expr as E
+from ..core import sqlgen
+from ..core.recursive_cte import recursive_cte_py
+from . import relation_io
+from .adapter import Adapter, connect
+from .dialect import json_to_matrix, matrix_to_json
+from .sql_engine import SQLEngine
+
+
+@dataclasses.dataclass
+class DBTrainResult:
+    """Outcome of an in-database training run."""
+
+    weights: dict[str, np.ndarray]        # final iterate
+    history: list[dict[str, np.ndarray]]  # every iterate, incl. iter 0
+    strategy: str
+    sql: str                              # the (last) query that ran
+
+    @property
+    def n_iters(self) -> int:
+        return len(self.history) - 1
+
+
+def _open(backend: str, path: str, adapter: Adapter | None) -> tuple[Adapter, bool]:
+    if adapter is not None:
+        return adapter, False
+    return connect(backend, path), True
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+def _train_recursive_arrays(graph, weights, x, y_onehot, n_iters,
+                            adapter: Adapter) -> DBTrainResult:
+    """One recursive query over array-typed columns (sqlite-executable)."""
+    adapter.create_table("weights", [("w_xh", "text"), ("w_ho", "text")])
+    adapter.bulk_insert("weights", [(matrix_to_json(weights["w_xh"]),
+                                     matrix_to_json(weights["w_ho"]))])
+    adapter.create_table("data", [("img", "text"), ("one_hot", "text")])
+    adapter.bulk_insert("data", [(matrix_to_json(x), matrix_to_json(y_onehot))])
+    sql = sqlgen.training_query_array_calls(graph, n_iters, graph.spec.lr)
+    rows = sorted(adapter.execute(sql))  # (iter, w_xh, w_ho)
+    history = [{"w_xh": json_to_matrix(wxh), "w_ho": json_to_matrix(who)}
+               for _it, wxh, who in rows]
+    return DBTrainResult(weights=history[-1], history=history,
+                         strategy="recursive", sql=sql)
+
+
+def _train_recursive_listing7(graph, weights, x, y_onehot, n_iters,
+                              adapter: Adapter) -> DBTrainResult:
+    """Listing 7 verbatim — engines whose recursive CTEs are set-at-a-time
+    and allow the recursive table inside a nested WITH (duckdb)."""
+    relation_io.write_matrix(adapter, "img", x)
+    relation_io.write_matrix(adapter, "one_hot", y_onehot)
+    relation_io.write_matrix(adapter, "w_xh_init", weights["w_xh"])
+    relation_io.write_matrix(adapter, "w_ho_init", weights["w_ho"])
+    sql = sqlgen.training_query_sql92(graph, n_iters, graph.spec.lr,
+                                      adapter.dialect)
+    rows = adapter.execute(sql)  # (iter, id, i, j, v)
+    return _history_from_w_rows(rows, graph, sql, "recursive")
+
+
+def _train_stepped(graph, weights, x, y_onehot, n_iters,
+                   adapter: Adapter) -> DBTrainResult:
+    """Listing 7's step as INSERT…SELECT, iterated by ``recursive_cte_py``."""
+    relation_io.write_matrix(adapter, "img", x)
+    relation_io.write_matrix(adapter, "one_hot", y_onehot)
+    adapter.create_table("w", [("iter", "integer"), ("id", "integer"),
+                               ("i", "integer"), ("j", "integer"),
+                               ("v", "double precision")])
+    adapter.bulk_insert("w", [(0, 0) + r
+                              for r in relation_io.matrix_to_rows(weights["w_xh"])])
+    adapter.bulk_insert("w", [(0, 1) + r
+                              for r in relation_io.matrix_to_rows(weights["w_ho"])])
+    step_sql = sqlgen.training_step_sql92(graph, graph.spec.lr, adapter.dialect)
+
+    def step(_state, _it):
+        adapter.execute(step_sql)
+        return _state
+
+    recursive_cte_py(None, step, n_iters)
+    rows = adapter.execute("select iter, id, i, j, v from w")
+    return _history_from_w_rows(rows, graph, step_sql, "stepped")
+
+
+def _history_from_w_rows(rows, graph, sql, strategy) -> DBTrainResult:
+    """Pivot the ``w(iter, id, i, j, v)`` history relation per iterate
+    (one pass over the rows — the relation grows with every iteration)."""
+    shapes = {0: graph.w_xh.shape, 1: graph.w_ho.shape}
+    names = {0: "w_xh", 1: "w_ho"}
+    n_iters = max(r[0] for r in rows)
+    history = [{names[wid]: np.zeros(shapes[wid]) for wid in (0, 1)}
+               for _ in range(n_iters + 1)]
+    for t, wid, i, j, v in rows:
+        history[t][names[wid]][int(i) - 1, int(j) - 1] = v
+    return DBTrainResult(weights=history[-1], history=history,
+                         strategy=strategy, sql=sql)
+
+
+def train_in_db(graph, weights, x, y_onehot, n_iters: int, *,
+                backend: str = "sqlite", path: str = ":memory:",
+                adapter: Adapter | None = None,
+                strategy: str = "recursive") -> DBTrainResult:
+    """Train the Section-2.2 MLP inside the database.  See module docstring
+    for the strategy × backend matrix."""
+    adapter, owned = _open(backend, path, adapter)
+    try:
+        if strategy == "recursive":
+            if adapter.dialect.supports_listing7:
+                return _train_recursive_listing7(
+                    graph, weights, x, y_onehot, n_iters, adapter)
+            return _train_recursive_arrays(
+                graph, weights, x, y_onehot, n_iters, adapter)
+        if strategy == "stepped":
+            return _train_stepped(graph, weights, x, y_onehot, n_iters, adapter)
+        raise ValueError(f"unknown strategy {strategy!r}")
+    finally:
+        if owned:
+            adapter.close()
+
+
+# ---------------------------------------------------------------------------
+# inference (Listing 8/11)
+# ---------------------------------------------------------------------------
+
+def infer_in_db(graph, weights, x, *, backend: str = "sqlite",
+                path: str = ":memory:",
+                adapter: Adapter | None = None) -> np.ndarray:
+    """Forward pass ``m(x)`` in-database; returns the probability matrix."""
+    adapter, owned = _open(backend, path, adapter)
+    try:
+        eng = SQLEngine(adapter=adapter)
+        probs, = eng.evaluate([graph.a_ho], {**weights, "img": x})
+        return probs
+    finally:
+        if owned:
+            adapter.close()
+
+
+def predict_in_db(graph, weights, x, *, backend: str = "sqlite",
+                  path: str = ":memory:",
+                  adapter: Adapter | None = None) -> np.ndarray:
+    """Listing 8's ``highestposition`` as a window function: argmax over the
+    output relation, computed by the database.  Returns 0-based labels."""
+    adapter, owned = _open(backend, path, adapter)
+    try:
+        eng = SQLEngine(adapter=adapter)
+        eng._write_env([graph.a_ho], {**weights, "img": x})
+        tail = (f"select q.i, min(q.j) from (select i, j, v,"
+                f" max(v) over (partition by i) as mv"
+                f" from {graph.a_ho.name}) q"
+                f" where q.v = q.mv group by q.i order by q.i")
+        sql = sqlgen.to_sql92([graph.a_ho], select=tail, dialect=eng.dialect)
+        rows = adapter.execute(sql)
+        return np.asarray([j - 1 for _i, j in rows], dtype=np.int32)
+    finally:
+        if owned:
+            adapter.close()
+
+
+def loss_trajectory_in_db(graph, history, x, y_onehot, *,
+                          backend: str = "sqlite", path: str = ":memory:",
+                          adapter: Adapter | None = None) -> np.ndarray:
+    """Mean loss of every weight iterate, each evaluated by the database —
+    the per-iteration differential signal against ``sgd_step_fn``."""
+    adapter, owned = _open(backend, path, adapter)
+    try:
+        eng = SQLEngine(adapter=adapter)
+        fn = eng.eval_fn([graph.loss])
+        losses = [float(np.mean(fn({**w, "img": x, "one_hot": y_onehot})[0]))
+                  for w in history]
+        return np.asarray(losses)
+    finally:
+        if owned:
+            adapter.close()

@@ -1,9 +1,12 @@
 """Core-library tests: relational algebra, Algorithm-1 autodiff, engines."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install repro[test])")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import Engine, autodiff, dense, nn2sql

@@ -1,8 +1,12 @@
 """MoE: the paper's two representations must agree exactly."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install repro[test])")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.nn.moe import MoEConfig, _route, init_moe, moe_ffn

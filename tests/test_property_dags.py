@@ -6,10 +6,14 @@ building blocks (Listing 4):
   * Algorithm-1 gradients ≡ jax.grad of the dense evaluation;
   * the SQL-92 rendering is structurally well-formed.
 """
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install repro[test])")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import Engine, autodiff, dense

@@ -16,7 +16,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import Engine, nn2sql
-from repro.db import HAVE_DUCKDB
+from repro.db import HAVE_DUCKDB, plan_cache
 from repro.db.train import (infer_in_db, loss_trajectory_in_db,
                             predict_in_db, train_in_db)
 
@@ -73,6 +73,14 @@ def main():
     probs_dense = nn2sql.infer(graph, Engine("dense"))(final, jnp.asarray(x))
     print(f"max |m(x)_db - m(x)_dense|: "
           f"{np.abs(probs_db - np.asarray(probs_dense)).max():.2e}")
+
+    # -- 4. the rendered-SQL plan cache ---------------------------------------
+    # training/inference SQL is rendered once per topology × dialect and
+    # persisted (~/.cache/repro/plan_cache.db unless REPRO_PLAN_CACHE=off);
+    # re-running this example serves every query text from the cache
+    st = plan_cache.default_cache().stats
+    print(f"\nplan cache: {st['hits']} hits / {st['misses']} misses this "
+          f"run, {st['entries']} stored plans ({st['path'] or 'memory'})")
 
 
 if __name__ == "__main__":

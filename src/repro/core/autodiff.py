@@ -59,6 +59,8 @@ def derive(z: E.Expr, seed: E.Expr, grads: dict[E.Var, E.Expr] | None = None
     elif isinstance(z, E.Map):
         fprime = MapDeriv(name=f"d{z.fn.name}_{z.name}", shape=z.shape,
                           fn=z.fn, x=z.x, fx=z)
+        if E.is_auto_named(z):  # name embeds z's counter suffix
+            E.mark_auto_named(fprime)
         derive(z.x, E.hadamard(seed, fprime), grads)
     elif isinstance(z, E.Scale):
         derive(z.x, E.scale(z.c, seed), grads)

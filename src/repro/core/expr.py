@@ -22,15 +22,33 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import weakref
 from typing import Callable, Optional
 
 import jax.numpy as jnp
 
 _counter = itertools.count()
 
+#: nodes whose name came from ``_fresh`` rather than the caller.  SQL
+#: rendering (``core.sqlgen``) re-names these deterministically by topo
+#: position, so two structurally identical DAGs built at different counter
+#: states (different sessions, different test orderings) render to the
+#: *same* SQL text — the property the persistent plan cache relies on.
+_AUTO_NAMED: "weakref.WeakSet[Expr]" = weakref.WeakSet()
+
 
 def _fresh(prefix: str) -> str:
     return f"{prefix}_{next(_counter)}"
+
+
+def mark_auto_named(node: "Expr") -> "Expr":
+    """Record that ``node.name`` is generated, not semantic."""
+    _AUTO_NAMED.add(node)
+    return node
+
+
+def is_auto_named(node: "Expr") -> bool:
+    return node in _AUTO_NAMED
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -192,20 +210,28 @@ def var(name: str, shape: tuple[int, int]) -> Var:
     return Var(name=name, shape=tuple(shape))
 
 
+def _named(node: Expr, name: Optional[str]) -> Expr:
+    """Register ``node`` as auto-named when the caller gave no name."""
+    return node if name else mark_auto_named(node)
+
+
 def const(value: float, shape: tuple[int, int]) -> Const:
-    return Const(name=_fresh("const"), shape=tuple(shape), value=float(value))
+    return mark_auto_named(
+        Const(name=_fresh("const"), shape=tuple(shape), value=float(value)))
 
 
 def matmul(x: Expr, y: Expr, name: Optional[str] = None) -> MatMul:
     if x.shape[1] != y.shape[0]:
         raise ValueError(f"matmul inner dims: {x.shape} @ {y.shape}")
-    return MatMul(name=name or _fresh("mm"), shape=(x.shape[0], y.shape[1]), x=x, y=y)
+    return _named(MatMul(name=name or _fresh("mm"),
+                         shape=(x.shape[0], y.shape[1]), x=x, y=y), name)
 
 
 def _elementwise(cls, x: Expr, y: Expr, prefix: str, name=None):
     if x.shape != y.shape:
         raise ValueError(f"{prefix} shapes: {x.shape} vs {y.shape}")
-    return cls(name=name or _fresh(prefix), shape=x.shape, x=x, y=y)
+    return _named(cls(name=name or _fresh(prefix), shape=x.shape, x=x, y=y),
+                  name)
 
 
 def hadamard(x: Expr, y: Expr, name=None) -> Hadamard:
@@ -221,15 +247,18 @@ def sub(x: Expr, y: Expr, name=None) -> Sub:
 
 
 def scale(c: float, x: Expr, name=None) -> Scale:
-    return Scale(name=name or _fresh("scale"), shape=x.shape, c=float(c), x=x)
+    return _named(Scale(name=name or _fresh("scale"), shape=x.shape,
+                        c=float(c), x=x), name)
 
 
 def transpose(x: Expr, name=None) -> Transpose:
-    return Transpose(name=name or _fresh("t"), shape=(x.shape[1], x.shape[0]), x=x)
+    return _named(Transpose(name=name or _fresh("t"),
+                            shape=(x.shape[1], x.shape[0]), x=x), name)
 
 
 def mapfn(fn: MapFn, x: Expr, name=None) -> Map:
-    return Map(name=name or _fresh(fn.name), shape=x.shape, fn=fn, x=x)
+    return _named(Map(name=name or _fresh(fn.name), shape=x.shape,
+                      fn=fn, x=x), name)
 
 
 def sigmoid(x: Expr, name=None) -> Map:

@@ -23,6 +23,8 @@ the ``sqlite`` / ``duckdb`` dialects make the output *executable* — see
 """
 from __future__ import annotations
 
+import hashlib
+
 from . import expr as E
 from .autodiff import MapDeriv, derive
 
@@ -32,6 +34,66 @@ def _get_dialect(dialect):
     from ..db.dialect import Sql92Dialect, get_dialect
 
     return Sql92Dialect() if dialect is None else get_dialect(dialect)
+
+
+# ---------------------------------------------------------------------------
+# deterministic naming + structural signatures (plan-cache foundation)
+# ---------------------------------------------------------------------------
+
+def assign_names(order: list[E.Expr]) -> dict[int, str]:
+    """id → SQL name for every node of a topo order.
+
+    Explicitly named nodes (``a_xh``, Var table names, …) keep their names;
+    auto-named nodes (``mm_37`` — global-counter suffixes) are renamed by
+    topo position (``mm_c0``, ``had_c1``, …).  Rendering therefore depends
+    only on DAG *structure* and the explicit names: two structurally
+    identical DAGs built in different sessions produce byte-identical SQL,
+    which is what lets :mod:`repro.db.plan_cache` reuse rendered plans
+    across processes.
+    """
+    taken = {n.name for n in order if not E.is_auto_named(n)}
+    nm: dict[int, str] = {}
+    k = 0
+    for node in order:
+        if not E.is_auto_named(node):
+            nm[id(node)] = node.name
+            continue
+        stem = node.name.rsplit("_", 1)[0] or "n"
+        while True:  # deterministic collision bump against explicit names
+            cand = f"{stem}_c{k}"
+            k += 1
+            if cand not in taken:
+                break
+        taken.add(cand)
+        nm[id(node)] = cand
+    return nm
+
+
+def dag_signature(roots: list[E.Expr], extra=()) -> str:
+    """Structural sha256 of a DAG: node types, shapes, constants, edges and
+    *explicit* names (auto-generated names are anonymised, matching
+    :func:`assign_names`).  Identical signature ⇒ identical rendered SQL,
+    so this — together with the dialect name and the select-tail kind — is
+    the plan-cache key.  ``extra`` items are folded into the hash verbatim.
+    """
+    order = E.topo_order(*roots)
+    idx = {id(n): k for k, n in enumerate(order)}
+    parts = []
+    for n in order:
+        fields = [type(n).__name__,
+                  "@" if E.is_auto_named(n) else n.name,
+                  repr(tuple(n.shape))]
+        if isinstance(n, E.Const):
+            fields.append(repr(n.value))
+        elif isinstance(n, E.Scale):
+            fields.append(repr(n.c))
+        elif isinstance(n, (E.Map, MapDeriv)):
+            fields.append(n.fn.name)
+        fields += [str(idx[id(c)]) for c in n.children()]
+        parts.append("|".join(fields))
+    parts.append("roots:" + ",".join(str(idx[id(r)]) for r in roots))
+    parts += [repr(e) for e in extra]
+    return hashlib.sha256("\n".join(parts).encode()).hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -81,23 +143,30 @@ def _with_keyword(dialect, recursive: bool = False) -> str:
 def render_ctes(roots: list[E.Expr], dialect=None
                 ) -> tuple[list[str], dict[int, str]]:
     """One CTE string per non-leaf node, topologically ordered, plus the
-    id→name map used to reference any node (Vars map to their table name)."""
+    id→name map used to reference any node (Vars map to their table name;
+    auto-named nodes get deterministic names — :func:`assign_names`)."""
     dialect = _get_dialect(dialect)
-    nm: dict[int, str] = {}
+    order = E.topo_order(*roots)
+    nm = assign_names(order)
     ctes: list[str] = []
-    for node in E.topo_order(*roots):
-        nm[id(node)] = node.name
+    for node in order:
         if not isinstance(node, E.Var):
-            ctes.append(
-                f"{node.name}(i, j, v) as (\n  {_cte_sql(node, nm, dialect)}\n)")
+            ctes.append(f"{nm[id(node)]}(i, j, v) as "
+                        f"(\n  {_cte_sql(node, nm, dialect)}\n)")
     return ctes, nm
 
 
-def to_sql92(roots: list[E.Expr], select: str | None = None,
-             dialect=None) -> str:
-    """Emit a WITH query: one CTE per non-leaf node, topologically ordered."""
+def to_sql92(roots: list[E.Expr], select=None, dialect=None) -> str:
+    """Emit a WITH query: one CTE per non-leaf node, topologically ordered.
+
+    ``select`` is the query tail: a literal string, or a callable
+    ``select(nm)`` receiving the id→name map (use the callable form for
+    tails that reference auto-named roots — their CTE names are assigned at
+    render time)."""
     dialect = _get_dialect(dialect)
     ctes, nm = render_ctes(roots, dialect)
+    if callable(select):
+        select = select(nm)
     tail = select or f"select * from {nm[id(roots[-1])]} order by i, j"
     if not ctes:  # every root is a stored table
         return f"{tail};"
@@ -105,14 +174,17 @@ def to_sql92(roots: list[E.Expr], select: str | None = None,
     return f"{_with_keyword(dialect)} {body}\n{tail};"
 
 
-def multi_root_select(roots: list[E.Expr]) -> str:
+def multi_root_select(roots: list[E.Expr]):
     """A union-all tail tagging each root's tuples with its position — lets
     one statement return every output of a multi-root DAG (loss + grads).
-    Each root is addressed by its own name (its CTE, or its table if a
-    Var)."""
-    return "\nunion all ".join(
-        f"select {k} as r, i, j, v from {r.name}"
-        for k, r in enumerate(roots))
+    Returns a callable for :func:`to_sql92`'s ``select`` so each root is
+    addressed by its render-time name (its CTE, or its table if a Var)."""
+    def tail(nm: dict[int, str]) -> str:
+        return "\nunion all ".join(
+            f"select {k} as r, i, j, v from {nm[id(r)]}"
+            for k, r in enumerate(roots))
+
+    return tail
 
 
 def _training_step_parts(graph, lr: float, dialect,
@@ -125,22 +197,19 @@ def _training_step_parts(graph, lr: float, dialect,
     grads = derive(graph.loss, E.const(1.0, graph.loss.shape))
     g_xh, g_ho = grads[graph.w_xh], grads[graph.w_ho]
     order = E.topo_order(graph.loss, g_xh, g_ho)
-    nm: dict[int, str] = {}
+    nm = assign_names(order)
     ctes: list[str] = []
     for node in order:
         if isinstance(node, E.Var):
             if node.name in ("w_xh", "w_ho"):
                 wid = 0 if node.name == "w_xh" else 1
-                nm[id(node)] = node.name
                 ctes.append(
                     f"{node.name}(i, j, v) as (\n"
                     f"  select i, j, v from w_ where id = {wid}\n"
                     f"   and iter = (select max(iter) from w_)\n)")
-            else:
-                nm[id(node)] = node.name
             continue
-        nm[id(node)] = node.name
-        ctes.append(f"{node.name}(i, j, v) as (\n  {_cte_sql(node, nm, dialect)}\n)")
+        ctes.append(f"{nm[id(node)]}(i, j, v) as "
+                    f"(\n  {_cte_sql(node, nm, dialect)}\n)")
     ctes.append(
         "d_w(id, i, j, v) as (\n"
         f"    select 0, i, j, v from {nm[id(g_xh)]} union all\n"
@@ -235,19 +304,21 @@ def _array_expr(node: E.Expr) -> str:
 
 def to_sql_arrays(roots: list[E.Expr]) -> str:
     """Nested select with one derived-table level per CTE (Listing 10)."""
-    order = [n for n in E.topo_order(*roots)
-             if not isinstance(n, (E.Var, E.Const))]
+    full_order = E.topo_order(*roots)
+    nm = assign_names(full_order)
+    order = [n for n in full_order if not isinstance(n, (E.Var, E.Const))]
     # innermost: the raw tables; each level materialises one named expression
     inner = "select * from data, weights"
     for node in order:
-        expr_sql = _array_expr_shallow(node)
-        inner = f"select {expr_sql} as {node.name}, * from (\n{inner}) q_{node.name}"
+        expr_sql = _array_expr_shallow(node, nm)
+        inner = (f"select {expr_sql} as {nm[id(node)]}, *"
+                 f" from (\n{inner}) q_{nm[id(node)]}")
     return inner + ";"
 
 
-def _array_expr_shallow(node: E.Expr) -> str:
+def _array_expr_shallow(node: E.Expr, nm: dict[int, str]) -> str:
     """Like _array_expr but children referenced by their CTE names."""
-    name = lambda c: (str(c.value) if isinstance(c, E.Const) else c.name)
+    name = lambda c: (str(c.value) if isinstance(c, E.Const) else nm[id(c)])
     if isinstance(node, E.MatMul):
         return f"({name(node.x)} ** {name(node.y)})"
     if isinstance(node, E.Hadamard):
@@ -277,19 +348,20 @@ def training_query_arrays(graph, n_iters: int, lr: float) -> str:
     the backward pass reuses the forward CTEs exactly as the paper does."""
     grads = derive(graph.loss, E.const(1.0, graph.loss.shape))
     g_xh, g_ho = grads[graph.w_xh], grads[graph.w_ho]
-    order = [n for n in E.topo_order(g_xh, g_ho)
-             if not isinstance(n, (E.Var, E.Const))]
+    full_order = E.topo_order(g_xh, g_ho)
+    nm = assign_names(full_order)
+    order = [n for n in full_order if not isinstance(n, (E.Var, E.Const))]
     inner = f"select * from data, w where id < {n_iters}"
     for node in order:
-        inner = (f"select {_array_expr_shallow(node)} as {node.name}, *"
-                 f" from (\n{inner}) q_{node.name}")
+        inner = (f"select {_array_expr_shallow(node, nm)} as {nm[id(node)]}, *"
+                 f" from (\n{inner}) q_{nm[id(node)]}")
     return (
         "with recursive w (id, w_xh, w_ho) as (\n"
         "  select 0, w_xh, w_ho from weights\n"
         "  union all\n"
         "  select id + 1,\n"
-        f"         w_xh - {lr} * {g_xh.name},\n"
-        f"         w_ho - {lr} * {g_ho.name}\n"
+        f"         w_xh - {lr} * {nm[id(g_xh)]},\n"
+        f"         w_ho - {lr} * {nm[id(g_ho)]}\n"
         f"    from (\n{inner})\n"
         ")\nselect * from w;")
 

@@ -5,7 +5,9 @@
 * :mod:`~repro.db.dialect` — SQL dialects (sql92 golden, sqlite, duckdb)
   plus the UDF array extension (the §5 analogue for stock engines);
 * :mod:`~repro.db.adapter` — thin connections over ``sqlite3`` / ``duckdb``;
-* :mod:`~repro.db.relation_io` — dense arrays ↔ ``{[i, j, v]}`` tables;
+* :mod:`~repro.db.relation_io` — dense arrays ↔ ``{[i, j, v]}`` tables
+  (vectorized pivots);
+* :mod:`~repro.db.plan_cache` — persistent cache of rendered SQL plans;
 * :mod:`~repro.db.sql_engine` — ``SQLEngine``, the ``Engine("sql")`` backend;
 * :mod:`~repro.db.train` — Listing 7/10 training + Listing 8 inference
   executed inside the database.
@@ -20,17 +22,19 @@ from .dialect import (ARRAY_UDFS, HAVE_DUCKDB, DuckDBDialect, Sql92Dialect,
                       matrix_to_json)
 
 __all__ = [
-    "adapter", "dialect", "relation_io", "sql_engine", "train",
+    "adapter", "dialect", "relation_io", "plan_cache", "sql_engine", "train",
     "Adapter", "SQLiteAdapter", "DuckDBAdapter", "connect",
     "Sql92Dialect", "SqliteDialect", "DuckDBDialect", "get_dialect",
     "ARRAY_UDFS", "HAVE_DUCKDB", "matrix_to_json", "json_to_matrix",
-    "SQLEngine", "train_in_db", "infer_in_db", "predict_in_db",
+    "SQLEngine", "PlanCache", "train_in_db", "infer_in_db", "predict_in_db",
 ]
 
 _LAZY = {
+    "plan_cache": ("repro.db.plan_cache", None),
     "sql_engine": ("repro.db.sql_engine", None),
     "train": ("repro.db.train", None),
     "SQLEngine": ("repro.db.sql_engine", "SQLEngine"),
+    "PlanCache": ("repro.db.plan_cache", "PlanCache"),
     "train_in_db": ("repro.db.train", "train_in_db"),
     "infer_in_db": ("repro.db.train", "infer_in_db"),
     "predict_in_db": ("repro.db.train", "predict_in_db"),

@@ -7,8 +7,21 @@ One interface, two implementations:
 
 An adapter owns a connection plus the matching :mod:`repro.db.dialect`, and
 exposes exactly what the execution backend needs: ``execute`` (rows back),
-``create_table`` and ``bulk_insert``.  Everything else (SQL rendering, array
-pivoting) lives in ``dialect`` / ``relation_io`` so the adapters stay thin.
+``create_table``, ``bulk_insert`` and the vectorized ``insert_columns``.
+Everything else (SQL rendering, array pivoting) lives in ``dialect`` /
+``relation_io`` so the adapters stay thin.
+
+Ingestion strategy per backend (the MNIST-scale bottleneck — see
+``benchmarks/bench_mnist_db.py``):
+
+* generic — chunked ``executemany`` over C-level ``zip`` of column
+  ``tolist()`` slices (no per-cell Python arithmetic);
+* sqlite — multi-row ``INSERT … VALUES (…),(…),…`` batches (fewer
+  statement steps; ~3× over the flat per-cell path, which is the floor the
+  row-at-a-time storage model allows);
+* duckdb — zero-loop registration of the column arrays (Arrow table when
+  ``pyarrow`` is importable, pandas/numpy dict otherwise) followed by one
+  ``INSERT INTO … SELECT``.
 """
 from __future__ import annotations
 
@@ -16,10 +29,15 @@ import re
 import sqlite3
 from typing import Iterable, Sequence
 
+import numpy as np
+
 from .dialect import (HAVE_DUCKDB, DuckDBDialect, Sql92Dialect, SqliteDialect,
                       duckdb)
 
 _IDENT = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
+
+#: rows per executemany chunk (bounds peak Python-object materialisation)
+CHUNK_ROWS = 100_000
 
 
 def _check_ident(name: str) -> str:
@@ -36,6 +54,15 @@ class Adapter:
 
     def __init__(self, conn):
         self.conn = conn
+        #: table → content digest of the matrix it stores, maintained by
+        #: SQLEngine's leaf ingestion.  Lives on the adapter (not the
+        #: engine) so every adapter-level mutation of a table — replace
+        #: via create_table or append via bulk_insert/insert_columns, e.g.
+        #: db.train writing `img` directly — invalidates the entry, and
+        #: engines sharing one connection share the skip.  (Raw
+        #: ``execute`` writes are untracked: mutate matrix tables through
+        #: the structured methods.)
+        self.matrix_digests: dict[str, bytes] = {}
         self.dialect.prepare(conn)
 
     # -- statement execution ------------------------------------------------
@@ -55,18 +82,51 @@ class Adapter:
                      replace: bool = True) -> None:
         """``columns`` is [(col_name, sql_type), ...]."""
         _check_ident(name)
+        self.matrix_digests.pop(name, None)
         cols = ", ".join(f"{_check_ident(c)} {t}" for c, t in columns)
         if replace:
             self.execute(f"drop table if exists {name}")
         self.execute(f"create table {name} ({cols})")
 
     def bulk_insert(self, name: str, rows: Iterable[Sequence]) -> None:
+        self.matrix_digests.pop(name, None)
         rows = list(rows)
         if not rows:
             return
         ph = ", ".join([self.placeholder] * len(rows[0]))
         self.executemany(f"insert into {_check_ident(name)} values ({ph})",
                          rows)
+
+    def _prepare_columns(self, name: str, cols: Sequence,
+                         dtype=None) -> tuple[list[np.ndarray], int]:
+        """Shared ``insert_columns`` preamble: identifier check, digest
+        invalidation, array conversion, equal-length validation.  Returns
+        ``(columns, n_rows)``; ``n_rows == 0`` means nothing to insert."""
+        _check_ident(name)
+        self.matrix_digests.pop(name, None)
+        cols = [np.asarray(c) if dtype is None else np.asarray(c, dtype)
+                for c in cols]
+        n = cols[0].shape[0] if cols else 0
+        if n and any(c.shape != (n,) for c in cols):
+            raise ValueError("insert_columns needs equal-length 1-D columns")
+        return cols, n
+
+    def insert_columns(self, name: str,
+                       cols: Sequence[np.ndarray]) -> None:
+        """Vectorized bulk ingestion: one ndarray per column, equal length.
+
+        Generic implementation: chunked ``executemany`` over ``zip`` of
+        ``tolist()`` slices — conversion to Python scalars happens in C,
+        never per-cell in Python.  Backends override with faster native
+        paths."""
+        cols, n = self._prepare_columns(name, cols)
+        if not n:
+            return
+        ph = ", ".join([self.placeholder] * len(cols))
+        sql = f"insert into {name} values ({ph})"
+        for s in range(0, n, CHUNK_ROWS):
+            e = min(n, s + CHUNK_ROWS)
+            self.executemany(sql, zip(*(c[s:e].tolist() for c in cols)))
 
     # -- lifecycle ----------------------------------------------------------
     def commit(self) -> None:
@@ -89,8 +149,44 @@ class Adapter:
 class SQLiteAdapter(Adapter):
     dialect = SqliteDialect()
 
+    #: rows per multi-row VALUES statement; sqlite's bound-parameter limit
+    #: is 999 on older builds — 300 rows × 3 cols stays under it
+    ROWS_PER_STMT = 300
+
     def __init__(self, path: str = ":memory:"):
         super().__init__(sqlite3.connect(path))
+
+    def insert_columns(self, name: str,
+                       cols: Sequence[np.ndarray]) -> None:
+        """Multi-row VALUES batching: one statement binds ROWS_PER_STMT
+        rows, executemany streams the batches.  Parameters are interleaved
+        into one flat float list by strided ndarray assignment (ints bind
+        fine through float64 — sqlite is dynamically typed and the matrix
+        schema only ever compares/joins on equality of exact small ints)."""
+        cols, n = self._prepare_columns(name, cols, dtype=np.float64)
+        if not n:
+            return
+        k = len(cols)
+        flat = np.empty(n * k)
+        for ci, c in enumerate(cols):
+            flat[ci::k] = c
+        flat = flat.tolist()
+        row_ph = "(" + ", ".join(["?"] * k) + ")"
+        # never exceed 999 bound parameters per statement, whatever the
+        # column count (wider tables than {i,j,v} pass through here too)
+        batch = max(1, min(self.ROWS_PER_STMT, 999 // k))
+        full, rem = divmod(n, batch)
+        cur = self.conn.cursor()
+        if full:
+            stride = k * batch
+            sql = (f"insert into {name} values "
+                   + ", ".join([row_ph] * batch))
+            cur.executemany(sql, (flat[s:s + stride]
+                                  for s in range(0, full * stride, stride)))
+        if rem:
+            sql = (f"insert into {name} values "
+                   + ", ".join([row_ph] * rem))
+            cur.execute(sql, flat[full * batch * k:])
 
 
 class DuckDBAdapter(Adapter):
@@ -105,6 +201,35 @@ class DuckDBAdapter(Adapter):
 
     def executemany(self, sql, rows):  # pragma: no cover - needs duckdb
         self.conn.executemany(sql, [tuple(r) for r in rows])
+
+    def insert_columns(self, name, cols):  # pragma: no cover - needs duckdb
+        """Register the column arrays as a relation (Arrow when available,
+        else a pandas DataFrame built zero-copy from the ndarrays) and run
+        ONE ``INSERT INTO … SELECT`` — duckdb's native bulk path; no
+        per-row Python at all."""
+        cols, n = self._prepare_columns(name, cols)
+        if not n:
+            return
+        names = [f"c{k}" for k in range(len(cols))]
+        view = f"_ingest_{name}"
+        frame = None
+        try:
+            import pyarrow as pa
+            frame = pa.table({nm: pa.array(c) for nm, c in zip(names, cols)})
+        except ImportError:
+            try:
+                import pandas as pd
+                frame = pd.DataFrame(dict(zip(names, cols)))
+            except ImportError:
+                pass
+        if frame is None:  # no columnar frontend — generic chunked path
+            Adapter.insert_columns(self, name, cols)
+            return
+        self.conn.register(view, frame)
+        try:
+            self.conn.execute(f"insert into {name} select * from {view}")
+        finally:
+            self.conn.unregister(view)
 
 
 def connect(backend: str = "sqlite", path: str = ":memory:") -> Adapter:

@@ -1,0 +1,208 @@
+"""Persistent cache of rendered SQL plans.
+
+Rendering the expression DAG to SQL (``core.sqlgen``) is pure string work,
+but a training loop pays it on every ``train_in_db`` call and every process
+start — while the *topology* of the query never changes between iterations
+(the ROADMAP's "persistent ``repro.db`` cache of rendered SQL").  This
+module stores rendered statements keyed by
+
+    ``dag_signature(roots) × dialect × select-tail kind``
+
+(:func:`repro.core.sqlgen.dag_signature` — structural, explicit names only),
+in a two-level store: a process-local dict in front of a sqlite file that
+survives sessions.  Because ``sqlgen`` renders auto-named nodes
+deterministically by topo position, a plan rendered by one process is
+byte-valid in any other — leaf (Var) table names are part of the signature.
+
+Environment:
+
+``REPRO_PLAN_CACHE``
+    Path of the persistent store.  Default
+    ``~/.cache/repro/plan_cache.db``; set to ``off`` (or ``0``) to keep the
+    cache memory-only.
+"""
+from __future__ import annotations
+
+import hashlib
+import inspect
+import os
+import sqlite3
+import time
+
+from ..core import expr as E
+from ..core import sqlgen
+
+_ENV = "REPRO_PLAN_CACHE"
+_DISABLED = {"off", "0", "none", "disabled"}
+
+_FINGERPRINT: str | None = None
+
+
+def renderer_fingerprint() -> str:
+    """Content hash of the rendering code — part of every plan key, so a
+    cached plan can never outlive the code that produced it (a persistent
+    store otherwise serves stale SQL after transpiler fixes).  Rendered
+    text depends on ``core.sqlgen`` (structure), ``core.autodiff`` (the
+    gradient DAGs baked into training queries keyed on the loss DAG alone)
+    and ``db.dialect`` (map/const/series spellings) — all three sources
+    are hashed."""
+    global _FINGERPRINT
+    if _FINGERPRINT is None:
+        from ..core import autodiff
+        from . import dialect as dialect_mod
+        chunks = []
+        for mod in (sqlgen, autodiff, dialect_mod):
+            try:
+                chunks.append(inspect.getsource(mod))
+            except (OSError, TypeError):  # pragma: no cover - frozen installs
+                chunks.append(getattr(mod, "__file__", "") or "unknown")
+        _FINGERPRINT = hashlib.sha256("\0".join(chunks).encode()) \
+            .hexdigest()[:16]
+    return _FINGERPRINT
+
+
+def plan_key(roots: list[E.Expr], extra=()) -> str:
+    """The cache key: structural DAG signature × renderer fingerprint ×
+    caller extras (dialect, tail/renderer kind, hyper-parameters)."""
+    return sqlgen.dag_signature(roots,
+                                extra=(renderer_fingerprint(),) + tuple(extra))
+
+
+def default_path() -> str | None:
+    """Resolve the persistent-store path (None → memory-only)."""
+    p = os.environ.get(_ENV)
+    if p is not None:
+        return None if p.strip().lower() in _DISABLED else p
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "plan_cache.db")
+
+
+class PlanCache:
+    """Two-level plan store: in-process dict over an optional sqlite file.
+
+    The sqlite layer is best-effort — any failure to open or write it
+    (read-only home, concurrent lock) silently degrades to memory-only, so
+    the execution backend never breaks on cache trouble.
+    """
+
+    def __init__(self, path: str | None = "default"):
+        if path == "default":
+            path = default_path()
+        self.path = path
+        self.hits = 0
+        self.misses = 0
+        self._mem: dict[str, str] = {}
+        self._conn = None
+        if path:
+            try:
+                os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+                self._conn = sqlite3.connect(path)
+                self._conn.execute(
+                    "create table if not exists plans ("
+                    " key text primary key, dialect text, sql text,"
+                    " created real)")
+                self._conn.commit()
+            except Exception:  # pragma: no cover - env-dependent degradation
+                self._conn = None
+
+    # -- store --------------------------------------------------------------
+    def get(self, key: str) -> str | None:
+        sql = self._mem.get(key)
+        if sql is None and self._conn is not None:
+            try:
+                row = self._conn.execute(
+                    "select sql from plans where key = ?", (key,)).fetchone()
+            except Exception:  # pragma: no cover
+                row = None
+            if row:
+                sql = row[0]
+                self._mem[key] = sql
+        if sql is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return sql
+
+    def put(self, key: str, sql: str, dialect: str = "") -> None:
+        self._mem[key] = sql
+        if self._conn is not None:
+            try:
+                self._conn.execute(
+                    "insert or replace into plans values (?, ?, ?, ?)",
+                    (key, dialect, sql, time.time()))
+                self._conn.commit()
+            except Exception:  # pragma: no cover
+                pass
+
+    def clear(self) -> None:
+        self._mem.clear()
+        if self._conn is not None:
+            try:
+                self._conn.execute("delete from plans")
+                self._conn.commit()
+            except Exception:  # pragma: no cover
+                pass
+
+    def __len__(self) -> int:
+        if self._conn is not None:
+            try:
+                return self._conn.execute(
+                    "select count(*) from plans").fetchone()[0]
+            except Exception:  # pragma: no cover
+                pass
+        return len(self._mem)
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self), "path": self.path}
+
+    def close(self) -> None:
+        if self._conn is not None:
+            try:
+                self._conn.close()
+            except Exception:  # pragma: no cover
+                pass
+            self._conn = None
+
+    # -- rendering through the cache ----------------------------------------
+    def rendered(self, key: str, dialect_name: str, render) -> str:
+        """``render()`` is called only on a miss; its output is stored."""
+        sql = self.get(key)
+        if sql is None:
+            sql = render()
+            self.put(key, sql, dialect_name)
+        return sql
+
+    def dag_sql(self, roots: list[E.Expr], dialect, tail: str = "last") -> str:
+        """Rendered WITH query for ``roots``; ``tail`` ∈ {'last',
+        'multi_root'} selects the statement tail kind (part of the key)."""
+        if tail not in ("last", "multi_root"):
+            raise ValueError(f"unknown tail kind {tail!r}")
+        key = plan_key(roots, extra=(dialect.name, f"tail:{tail}"))
+        select = (sqlgen.multi_root_select(roots) if tail == "multi_root"
+                  else None)
+        return self.rendered(
+            key, dialect.name,
+            lambda: sqlgen.to_sql92(roots, select=select, dialect=dialect))
+
+
+_default: PlanCache | None = None
+
+
+def default_cache() -> PlanCache:
+    """The process-wide shared cache (persistent unless disabled via env)."""
+    global _default
+    if _default is None:
+        _default = PlanCache()
+    return _default
+
+
+def resolve(cache) -> PlanCache | None:
+    """Normalise a user-supplied cache argument: None → shared default,
+    False → caching off, or a :class:`PlanCache` instance."""
+    if cache is None:
+        return default_cache()
+    if cache is False:
+        return None
+    return cache

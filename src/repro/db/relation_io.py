@@ -5,6 +5,12 @@ The paper stores a matrix as the relation ``{[i, j, v]}`` (Fig. 1) with
 (:class:`repro.core.relational.RelTensor`) is 0-based.  This module is the
 boundary: every matrix entering the database is pivoted to 1-based tuples,
 everything read back is pivoted to a dense 0-based array.
+
+All pivots are vectorized (``np.repeat``/``tile``/``ravel`` plus fancy
+indexing) — at MNIST scale (784×256 ≈ 200k cells) the per-cell Python loop
+of the original implementation dominates ingestion by >10×.  That loop is
+kept as :func:`matrix_to_rows_percell`, the measured baseline of
+``benchmarks/bench_mnist_db.py``.
 """
 from __future__ import annotations
 
@@ -18,11 +24,38 @@ MATRIX_COLUMNS = (("i", "integer"), ("j", "integer"), ("v", "double precision"))
 
 
 # ---------------------------------------------------------------------------
-# dense ↔ rows
+# dense ↔ columns / rows
 # ---------------------------------------------------------------------------
+
+def matrix_to_columns(x) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Dense matrix → column vectors ``(i, j, v)`` in canonical row-major
+    order, 1-based.  This is the zero-copy-ish form the adapters ingest
+    (chunked ``executemany`` on sqlite, Arrow/ndarray registration on
+    duckdb)."""
+    a = np.asarray(x, dtype=np.float64)
+    if a.ndim != 2:
+        raise ValueError(f"expected a matrix, got shape {a.shape}")
+    r, c = a.shape
+    i = np.repeat(np.arange(1, r + 1, dtype=np.int64), c)
+    j = np.tile(np.arange(1, c + 1, dtype=np.int64), r)
+    return i, j, a.ravel()
+
+
+def columns_to_rows(i, j, v) -> list[tuple[int, int, float]]:
+    """Column vectors → ``[(i, j, v)]`` with native Python scalars.
+    ``tolist()`` + ``zip`` run in C — no per-cell Python arithmetic."""
+    return list(zip(i.tolist(), j.tolist(), v.tolist()))
+
 
 def matrix_to_rows(x) -> list[tuple[int, int, float]]:
     """Dense matrix → canonical row-major ``[(i, j, v)]`` (1-based)."""
+    return columns_to_rows(*matrix_to_columns(x))
+
+
+def matrix_to_rows_percell(x) -> list[tuple[int, int, float]]:
+    """The original per-cell pivot — one Python iteration (and one
+    ``float()`` call) per matrix cell.  Kept only as the ingestion baseline
+    for the MNIST-scale benchmark; use :func:`matrix_to_rows`."""
     a = np.asarray(x, dtype=np.float64)
     if a.ndim != 2:
         raise ValueError(f"expected a matrix, got shape {a.shape}")
@@ -34,11 +67,14 @@ def rows_to_matrix(rows, shape: tuple[int, int]) -> np.ndarray:
     """``[(i, j, v)]`` (1-based, any order, gaps → 0) → dense matrix.
 
     Missing cells coalesce to 0 — the outer-join semantics of Listing 5's
-    one-hot construction.
-    """
+    one-hot construction.  One fancy-indexed assignment instead of a
+    Python loop."""
     out = np.zeros(shape, dtype=np.float64)
-    for i, j, v in rows:
-        out[int(i) - 1, int(j) - 1] = v
+    if not len(rows):
+        return out
+    arr = np.asarray(rows, dtype=np.float64)
+    out[arr[:, 0].astype(np.int64) - 1, arr[:, 1].astype(np.int64) - 1] \
+        = arr[:, 2]
     return out
 
 
@@ -46,15 +82,20 @@ def rows_to_matrix(rows, shape: tuple[int, int]) -> np.ndarray:
 # RelTensor ↔ rows (round-trips the JAX relational representation)
 # ---------------------------------------------------------------------------
 
-def reltensor_to_rows(rt: RelTensor) -> list[tuple[int, int, float]]:
-    """Valid tuples only: padding rows (``i == shape[0]``) are dropped, just
-    as the inner join drops them on-device."""
-    i = np.asarray(rt.i)
-    j = np.asarray(rt.j)
+def reltensor_to_columns(rt: RelTensor
+                         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Valid tuples only, as 1-based column vectors: padding rows
+    (``i == shape[0]``) are dropped, just as the inner join drops them
+    on-device."""
+    i = np.asarray(rt.i, dtype=np.int64)
+    j = np.asarray(rt.j, dtype=np.int64)
     v = np.asarray(rt.v, dtype=np.float64)
     keep = i < rt.shape[0]
-    return [(int(a) + 1, int(b) + 1, float(c))
-            for a, b, c in zip(i[keep], j[keep], v[keep])]
+    return i[keep] + 1, j[keep] + 1, v[keep]
+
+
+def reltensor_to_rows(rt: RelTensor) -> list[tuple[int, int, float]]:
+    return columns_to_rows(*reltensor_to_columns(rt))
 
 
 def rows_to_reltensor(rows, shape: tuple[int, int]) -> RelTensor:
@@ -68,9 +109,17 @@ def rows_to_reltensor(rows, shape: tuple[int, int]) -> RelTensor:
 # ---------------------------------------------------------------------------
 
 def write_matrix(adapter: Adapter, name: str, x) -> None:
-    """CREATE + bulk INSERT the relation for ``x`` (replacing any old one)."""
+    """CREATE + bulk-ingest the relation for ``x`` (replacing any old one).
+    The fast path: vectorized pivot + the adapter's column ingestion."""
     adapter.create_table(name, MATRIX_COLUMNS)
-    adapter.bulk_insert(name, matrix_to_rows(x))
+    adapter.insert_columns(name, matrix_to_columns(x))
+
+
+def write_matrix_percell(adapter: Adapter, name: str, x) -> None:
+    """The pre-vectorization ingestion path (per-cell pivot + one flat
+    ``executemany``) — the benchmark baseline."""
+    adapter.create_table(name, MATRIX_COLUMNS)
+    adapter.bulk_insert(name, matrix_to_rows_percell(x))
 
 
 def read_matrix(adapter: Adapter, name: str,
@@ -81,7 +130,7 @@ def read_matrix(adapter: Adapter, name: str,
 
 def write_reltensor(adapter: Adapter, name: str, rt: RelTensor) -> None:
     adapter.create_table(name, MATRIX_COLUMNS)
-    adapter.bulk_insert(name, reltensor_to_rows(rt))
+    adapter.insert_columns(name, reltensor_to_columns(rt))
 
 
 def read_reltensor(adapter: Adapter, name: str,

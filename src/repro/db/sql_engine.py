@@ -4,12 +4,16 @@
 (``evaluate`` / ``eval_fn`` / ``value_and_grad_fn``) but instead of running
 XLA ops it
 
-1. pivots every leaf matrix into an ``{[i, j, v]}`` table
-   (:mod:`repro.db.relation_io`),
+1. pivots every leaf matrix into an ``{[i, j, v]}`` table with the
+   vectorized ingestion path (:mod:`repro.db.relation_io`) — unchanged
+   leaves (training data across iterations) are detected by content digest
+   and not re-written,
 2. renders the DAG — including Algorithm-1 gradient graphs — as one WITH
-   query, one CTE per node (:func:`repro.core.sqlgen.to_sql92`), and
+   query, one CTE per node, through the persistent plan cache
+   (:mod:`repro.db.plan_cache`): rendering is paid once per topology ×
+   dialect, across iterations AND processes, and
 3. executes it on the connected engine and pivots the result tuples back
-   into dense arrays.
+   into dense arrays (one fancy-indexed assignment per root).
 
 It is reachable as ``Engine("sql")``; training loops route through
 :mod:`repro.db.train` (the recursive-CTE loop runs entirely in-database).
@@ -19,22 +23,35 @@ test rather than a silently wrong string.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Callable
 
 import numpy as np
 
-from ..core import autodiff, sqlgen
+from ..core import autodiff
 from ..core import expr as E
-from . import relation_io
+from . import plan_cache, relation_io
 from .adapter import Adapter, connect
 
 
 def _split_tagged(rows, roots: list[E.Expr]) -> list[np.ndarray]:
-    """One pass over ``(r, i, j, v)`` union rows → a dense matrix per root."""
+    """``(r, i, j, v)`` union rows → a dense matrix per root (vectorized)."""
     outs = [np.zeros(root.shape, dtype=np.float64) for root in roots]
-    for r, i, j, v in rows:
-        outs[r][int(i) - 1, int(j) - 1] = v
+    if not len(rows):
+        return outs
+    arr = np.asarray(rows, dtype=np.float64)
+    r = arr[:, 0].astype(np.int64)
+    i = arr[:, 1].astype(np.int64) - 1
+    j = arr[:, 2].astype(np.int64) - 1
+    for k, out in enumerate(outs):
+        m = r == k
+        out[i[m], j[m]] = arr[m, 3]
     return outs
+
+
+def _digest(x) -> bytes:
+    a = np.ascontiguousarray(np.asarray(x, dtype=np.float64))
+    return hashlib.sha256(a.tobytes() + repr(a.shape).encode()).digest()
 
 
 class SQLEngine:
@@ -43,9 +60,13 @@ class SQLEngine:
     kind = "sql"
 
     def __init__(self, backend: str = "sqlite", path: str = ":memory:",
-                 adapter: Adapter | None = None):
+                 adapter: Adapter | None = None, plan_cache_=None):
+        """``plan_cache_``: a :class:`repro.db.plan_cache.PlanCache`,
+        ``None`` for the shared persistent default, or ``False`` to render
+        every query from scratch."""
         self.adapter = adapter if adapter is not None else connect(backend, path)
         self.dialect = self.adapter.dialect
+        self.plans = plan_cache.resolve(plan_cache_)
 
     # -- representation conversion (Engine-compatible no-ops) ---------------
     def lift(self, x):
@@ -56,11 +77,29 @@ class SQLEngine:
 
     # -- evaluation ---------------------------------------------------------
     def _write_env(self, roots: list[E.Expr], env: dict) -> None:
-        """Materialise every free Var of the DAG as its stored relation."""
+        """Materialise every free Var of the DAG as its stored relation.
+        Leaves whose content digest matches what is already in the database
+        are skipped — in an iteration loop only the weights move, the data
+        relations are ingested once.  Digests live on the adapter
+        (``matrix_digests``) and are invalidated by any ``create_table``
+        on the same name, so direct writes (db.train) can't go stale."""
+        stored = self.adapter.matrix_digests
         for v in E.free_vars(*roots):
             if v.name not in env:
                 raise KeyError(f"env missing leaf table {v.name!r}")
+            d = _digest(env[v.name])
+            if stored.get(v.name) == d:
+                continue
             relation_io.write_matrix(self.adapter, v.name, env[v.name])
+            stored[v.name] = d
+
+    def _render(self, roots: list[E.Expr]) -> str:
+        """Multi-root WITH query via the plan cache (or direct on miss)."""
+        if self.plans is not None:
+            return self.plans.dag_sql(roots, self.dialect, tail="multi_root")
+        from ..core import sqlgen
+        return sqlgen.to_sql92(roots, select=sqlgen.multi_root_select(roots),
+                               dialect=self.dialect)
 
     def evaluate(self, roots: list[E.Expr], env: dict) -> list[np.ndarray]:
         """One round trip: write leaves, run ONE multi-root query, read back.
@@ -70,16 +109,14 @@ class SQLEngine:
         pass) are rendered — and executable by the engine — exactly once.
         """
         self._write_env(roots, env)
-        sql = sqlgen.to_sql92(roots, select=sqlgen.multi_root_select(roots),
-                              dialect=self.dialect)
-        rows = self.adapter.execute(sql)
+        rows = self.adapter.execute(self._render(roots))
         return _split_tagged(rows, roots)
 
     def eval_fn(self, roots: list[E.Expr]) -> Callable:
         """Evaluator with the Engine.eval_fn contract (no jit — the
-        "compilation" is the SQL rendering, done once here)."""
-        sql = sqlgen.to_sql92(roots, select=sqlgen.multi_root_select(roots),
-                              dialect=self.dialect)
+        "compilation" is the SQL rendering, done once here and reused from
+        the plan cache across topologically identical graphs)."""
+        sql = self._render(roots)
 
         def fn(env: dict) -> list[np.ndarray]:
             self._write_env(roots, env)

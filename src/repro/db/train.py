@@ -34,10 +34,26 @@ import numpy as np
 from ..core import expr as E
 from ..core import sqlgen
 from ..core.recursive_cte import recursive_cte_py
-from . import relation_io
+from . import plan_cache, relation_io
 from .adapter import Adapter, connect
 from .dialect import json_to_matrix, matrix_to_json
 from .sql_engine import SQLEngine
+
+
+def _training_sql(graph, kind: str, dialect_name: str, render, cache,
+                  *key_extra) -> str:
+    """Render one of the training statements through the plan cache:
+    keyed by the loss DAG's structural signature × renderer fingerprint ×
+    dialect × renderer kind × hyper-parameters, so re-running a benchmark
+    (or the next training session) skips ``sqlgen`` entirely.  ``cache``
+    follows the :func:`repro.db.plan_cache.resolve` convention (None →
+    shared default, False → render fresh)."""
+    cache = plan_cache.resolve(cache)
+    if cache is None:
+        return render()
+    key = plan_cache.plan_key(
+        [graph.loss], extra=(dialect_name, f"train:{kind}") + key_extra)
+    return cache.rendered(key, dialect_name, render)
 
 
 @dataclasses.dataclass
@@ -48,6 +64,9 @@ class DBTrainResult:
     history: list[dict[str, np.ndarray]]  # every iterate, incl. iter 0
     strategy: str
     sql: str                              # the (last) query that ran
+    #: bytes the training recursion materialised (every iterate stays in
+    #: the recursive weight relation — the paper's Fig. 5 memory axis)
+    cte_bytes: int = 0
 
     @property
     def n_iters(self) -> int:
@@ -65,48 +84,60 @@ def _open(backend: str, path: str, adapter: Adapter | None) -> tuple[Adapter, bo
 # ---------------------------------------------------------------------------
 
 def _train_recursive_arrays(graph, weights, x, y_onehot, n_iters,
-                            adapter: Adapter) -> DBTrainResult:
+                            adapter: Adapter, cache=None) -> DBTrainResult:
     """One recursive query over array-typed columns (sqlite-executable)."""
     adapter.create_table("weights", [("w_xh", "text"), ("w_ho", "text")])
     adapter.bulk_insert("weights", [(matrix_to_json(weights["w_xh"]),
                                      matrix_to_json(weights["w_ho"]))])
     adapter.create_table("data", [("img", "text"), ("one_hot", "text")])
     adapter.bulk_insert("data", [(matrix_to_json(x), matrix_to_json(y_onehot))])
-    sql = sqlgen.training_query_array_calls(graph, n_iters, graph.spec.lr)
+    sql = _training_sql(
+        graph, "array_calls", adapter.dialect.name,
+        lambda: sqlgen.training_query_array_calls(graph, n_iters,
+                                                  graph.spec.lr),
+        cache, n_iters, graph.spec.lr)
     rows = sorted(adapter.execute(sql))  # (iter, w_xh, w_ho)
     history = [{"w_xh": json_to_matrix(wxh), "w_ho": json_to_matrix(who)}
                for _it, wxh, who in rows]
+    cte_bytes = sum(len(wxh) + len(who) for _it, wxh, who in rows)
     return DBTrainResult(weights=history[-1], history=history,
-                         strategy="recursive", sql=sql)
+                         strategy="recursive", sql=sql, cte_bytes=cte_bytes)
 
 
 def _train_recursive_listing7(graph, weights, x, y_onehot, n_iters,
-                              adapter: Adapter) -> DBTrainResult:
+                              adapter: Adapter, cache=None) -> DBTrainResult:
     """Listing 7 verbatim — engines whose recursive CTEs are set-at-a-time
     and allow the recursive table inside a nested WITH (duckdb)."""
     relation_io.write_matrix(adapter, "img", x)
     relation_io.write_matrix(adapter, "one_hot", y_onehot)
     relation_io.write_matrix(adapter, "w_xh_init", weights["w_xh"])
     relation_io.write_matrix(adapter, "w_ho_init", weights["w_ho"])
-    sql = sqlgen.training_query_sql92(graph, n_iters, graph.spec.lr,
-                                      adapter.dialect)
+    sql = _training_sql(
+        graph, "listing7", adapter.dialect.name,
+        lambda: sqlgen.training_query_sql92(graph, n_iters, graph.spec.lr,
+                                            adapter.dialect),
+        cache, n_iters, graph.spec.lr)
     rows = adapter.execute(sql)  # (iter, id, i, j, v)
     return _history_from_w_rows(rows, graph, sql, "recursive")
 
 
 def _train_stepped(graph, weights, x, y_onehot, n_iters,
-                   adapter: Adapter) -> DBTrainResult:
+                   adapter: Adapter, cache=None) -> DBTrainResult:
     """Listing 7's step as INSERT…SELECT, iterated by ``recursive_cte_py``."""
     relation_io.write_matrix(adapter, "img", x)
     relation_io.write_matrix(adapter, "one_hot", y_onehot)
     adapter.create_table("w", [("iter", "integer"), ("id", "integer"),
                                ("i", "integer"), ("j", "integer"),
                                ("v", "double precision")])
-    adapter.bulk_insert("w", [(0, 0) + r
-                              for r in relation_io.matrix_to_rows(weights["w_xh"])])
-    adapter.bulk_insert("w", [(0, 1) + r
-                              for r in relation_io.matrix_to_rows(weights["w_ho"])])
-    step_sql = sqlgen.training_step_sql92(graph, graph.spec.lr, adapter.dialect)
+    for wid, key in ((0, "w_xh"), (1, "w_ho")):
+        i, j, v = relation_io.matrix_to_columns(weights[key])
+        adapter.insert_columns("w", (np.zeros_like(i),
+                                     np.full_like(i, wid), i, j, v))
+    step_sql = _training_sql(
+        graph, "stepped", adapter.dialect.name,
+        lambda: sqlgen.training_step_sql92(graph, graph.spec.lr,
+                                           adapter.dialect),
+        cache, graph.spec.lr)
 
     def step(_state, _it):
         adapter.execute(step_sql)
@@ -118,35 +149,51 @@ def _train_stepped(graph, weights, x, y_onehot, n_iters,
 
 
 def _history_from_w_rows(rows, graph, sql, strategy) -> DBTrainResult:
-    """Pivot the ``w(iter, id, i, j, v)`` history relation per iterate
-    (one pass over the rows — the relation grows with every iteration)."""
+    """Pivot the ``w(iter, id, i, j, v)`` history relation per iterate —
+    one stacked fancy-indexed assignment per weight id instead of a Python
+    loop over the (iters × cells)-sized relation."""
     shapes = {0: graph.w_xh.shape, 1: graph.w_ho.shape}
     names = {0: "w_xh", 1: "w_ho"}
-    n_iters = max(r[0] for r in rows)
-    history = [{names[wid]: np.zeros(shapes[wid]) for wid in (0, 1)}
-               for _ in range(n_iters + 1)]
-    for t, wid, i, j, v in rows:
-        history[t][names[wid]][int(i) - 1, int(j) - 1] = v
+    arr = np.asarray(rows, dtype=np.float64)
+    t = arr[:, 0].astype(np.int64)
+    wid = arr[:, 1].astype(np.int64)
+    i = arr[:, 2].astype(np.int64) - 1
+    j = arr[:, 3].astype(np.int64) - 1
+    n_iters = int(t.max())
+    stacks = {}
+    for w in (0, 1):
+        stack = np.zeros((n_iters + 1,) + shapes[w])
+        m = wid == w
+        stack[t[m], i[m], j[m]] = arr[m, 4]
+        stacks[w] = stack
+    history = [{names[w]: stacks[w][k] for w in (0, 1)}
+               for k in range(n_iters + 1)]
     return DBTrainResult(weights=history[-1], history=history,
-                         strategy=strategy, sql=sql)
+                         strategy=strategy, sql=sql,
+                         cte_bytes=len(rows) * 5 * 8)  # (iter,id,i,j,v) rows
 
 
 def train_in_db(graph, weights, x, y_onehot, n_iters: int, *,
                 backend: str = "sqlite", path: str = ":memory:",
                 adapter: Adapter | None = None,
-                strategy: str = "recursive") -> DBTrainResult:
+                strategy: str = "recursive",
+                plan_cache_=None) -> DBTrainResult:
     """Train the Section-2.2 MLP inside the database.  See module docstring
-    for the strategy × backend matrix."""
+    for the strategy × backend matrix.  ``plan_cache_``: a
+    :class:`~repro.db.plan_cache.PlanCache`, ``None`` for the shared
+    persistent default, or ``False`` to render the training SQL fresh."""
     adapter, owned = _open(backend, path, adapter)
     try:
         if strategy == "recursive":
             if adapter.dialect.supports_listing7:
                 return _train_recursive_listing7(
-                    graph, weights, x, y_onehot, n_iters, adapter)
+                    graph, weights, x, y_onehot, n_iters, adapter,
+                    plan_cache_)
             return _train_recursive_arrays(
-                graph, weights, x, y_onehot, n_iters, adapter)
+                graph, weights, x, y_onehot, n_iters, adapter, plan_cache_)
         if strategy == "stepped":
-            return _train_stepped(graph, weights, x, y_onehot, n_iters, adapter)
+            return _train_stepped(graph, weights, x, y_onehot, n_iters,
+                                  adapter, plan_cache_)
         raise ValueError(f"unknown strategy {strategy!r}")
     finally:
         if owned:

@@ -116,8 +116,8 @@ def build_lowered(cfg, shape, mesh, fsdp: bool = True):
 
 
 def _costs(compiled):
-    ca = compiled.cost_analysis() or {}
-    from repro.roofline.analysis import parse_collectives
+    from repro.roofline.analysis import cost_analysis, parse_collectives
+    ca = cost_analysis(compiled)  # jax 0.4.3x returns a list of dicts
     colls = parse_collectives(compiled.as_text())
     return (float(ca.get("flops", 0.0)),
             float(ca.get("bytes accessed", 0.0)), colls)

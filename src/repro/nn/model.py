@@ -48,23 +48,18 @@ class LM:
         self.cfg = cfg
 
     def _scan(self, body, carry, xs):
-        """lax.scan over the layer stack, or an unrolled loop when
-        ``cfg.scan_layers`` is False. The dry-run unrolls so that
-        cost_analysis counts every layer (scan bodies are counted once);
-        training examples scan for O(1)-in-depth compile time."""
+        """lax.scan over the layer stack, or the same scan fully unrolled
+        when ``cfg.scan_layers`` is False. The dry-run unrolls so that
+        cost_analysis counts every layer (rolled scan bodies are counted
+        once); training examples scan for O(1)-in-depth compile time.
+        Using ``lax.scan(unroll=n)`` — not a hand-written Python loop —
+        keeps both paths bitwise identical (same slicing and stacking ops,
+        same bf16 rounding), which test_scan_and_unrolled_paths_agree
+        pins."""
         if self.cfg.scan_layers:
             return jax.lax.scan(body, carry, xs)
         n = jax.tree.leaves(xs)[0].shape[0]
-        ys = []
-        for i in range(n):
-            xi = jax.tree.map(lambda a: a[i], xs)
-            carry, y = body(carry, xi)
-            ys.append(y)
-        if ys and jax.tree.leaves(ys[0]):
-            ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
-        else:
-            ys = None
-        return carry, ys
+        return jax.lax.scan(body, carry, xs, unroll=max(n, 1))
 
     def _attend_full(self, q, k, v):
         """Full-sequence attention dispatch (cfg.attn_impl)."""

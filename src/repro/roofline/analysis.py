@@ -134,12 +134,25 @@ class Roofline:
             if self.step_s else 0.0
 
 
+def cost_analysis(compiled) -> dict:
+    """Version-tolerant ``compiled.cost_analysis()``.
+
+    jax ≤0.4.30 returns a dict, jax 0.4.31–0.4.3x returns a ONE-element
+    list of dicts (one per executable), newer jax returns a dict again;
+    ``None`` shows up for executables without cost info.  Always returns a
+    plain (possibly empty) dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
 def analyze(compiled, model_flops_per_chip: float = 0.0,
             extra_flops: float = 0.0, extra_bytes: float = 0.0) -> Roofline:
     """``extra_*``: analytic corrections for lax.scan bodies that XLA's
     cost analysis counts once instead of ×trip-count (the SSM time scans —
     see EXPERIMENTS.md §Dry-run 'accounting' note)."""
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0)) + extra_flops
     hbm = float(ca.get("bytes accessed", 0.0)) + extra_bytes
     colls = parse_collectives(compiled.as_text())

@@ -1,0 +1,76 @@
+with recursive z_xh(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from img as m inner join w_xh as n on m.j = n.i
+  group by m.i, n.j
+),
+a_xh(i, j, v) as (
+  select i, j, 1/(1+exp(-v)) as v from z_xh
+),
+z_ho(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from a_xh as m inner join w_ho as n on m.j = n.i
+  group by m.i, n.j
+),
+a_ho(i, j, v) as (
+  select i, j, 1/(1+exp(-v)) as v from z_ho
+),
+diff(i, j, v) as (
+  select m.i, m.j, m.v - n.v as v
+  from a_ho as m inner join one_hot as n on m.i = n.i and m.j = n.j
+),
+loss(i, j, v) as (
+  select i, j, v*v as v from diff
+),
+t_c0(i, j, v) as (
+  select j as i, i as j, v from img
+),
+const_c1(i, j, v) as (
+  select a.i, b.j, 1.0 as v
+  from (with recursive s(x) as (select 1 union all select x+1 from s where x < 4) select x as i from s) a,
+       (with recursive s(x) as (select 1 union all select x+1 from s where x < 2) select x as j from s) b
+),
+dsqr_loss(i, j, v) as (
+  select i, j, 2*v as v from diff
+),
+had_c2(i, j, v) as (
+  select m.i, m.j, m.v * n.v as v
+  from const_c1 as m inner join dsqr_loss as n on m.i = n.i and m.j = n.j
+),
+dsig_a_ho(i, j, v) as (
+  select i, j, v*(1-v) as v from a_ho
+),
+had_c3(i, j, v) as (
+  select m.i, m.j, m.v * n.v as v
+  from had_c2 as m inner join dsig_a_ho as n on m.i = n.i and m.j = n.j
+),
+t_c4(i, j, v) as (
+  select j as i, i as j, v from w_ho
+),
+mm_c5(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from had_c3 as m inner join t_c4 as n on m.j = n.i
+  group by m.i, n.j
+),
+dsig_a_xh(i, j, v) as (
+  select i, j, v*(1-v) as v from a_xh
+),
+had_c6(i, j, v) as (
+  select m.i, m.j, m.v * n.v as v
+  from mm_c5 as m inner join dsig_a_xh as n on m.i = n.i and m.j = n.j
+),
+mm_c7(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from t_c0 as m inner join had_c6 as n on m.j = n.i
+  group by m.i, n.j
+),
+t_c8(i, j, v) as (
+  select j as i, i as j, v from a_xh
+),
+mm_c9(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from t_c8 as m inner join had_c3 as n on m.j = n.i
+  group by m.i, n.j
+)
+select 0 as r, i, j, v from loss
+union all select 1 as r, i, j, v from mm_c7
+union all select 2 as r, i, j, v from mm_c9;

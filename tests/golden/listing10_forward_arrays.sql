@@ -1,0 +1,5 @@
+select sig(z_ho) as a_ho, * from (
+select (a_xh ** w_ho) as z_ho, * from (
+select sig(z_xh) as a_xh, * from (
+select (img ** w_xh) as z_xh, * from (
+select * from data, weights) q_z_xh) q_a_xh) q_z_ho) q_a_ho;

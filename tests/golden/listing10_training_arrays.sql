@@ -1,0 +1,28 @@
+with recursive w (id, w_xh, w_ho) as (
+  select 0, w_xh, w_ho from weights
+  union all
+  select id + 1,
+         w_xh - 0.05 * mm_c7,
+         w_ho - 0.05 * mm_c9
+    from (
+select (t_c8 ** had_c3) as mm_c9, * from (
+select transpose(a_xh) as t_c8, * from (
+select (t_c0 ** had_c6) as mm_c7, * from (
+select (mm_c5 * dsig_a_xh) as had_c6, * from (
+select (a_xh * (1 - a_xh)) as dsig_a_xh, * from (
+select (had_c3 ** t_c4) as mm_c5, * from (
+select transpose(w_ho) as t_c4, * from (
+select (had_c2 * dsig_a_ho) as had_c3, * from (
+select (a_ho * (1 - a_ho)) as dsig_a_ho, * from (
+select (1.0 * dsqr_loss) as had_c2, * from (
+select (2 * diff) as dsqr_loss, * from (
+select sqr(diff) as loss, * from (
+select (a_ho - one_hot) as diff, * from (
+select sig(z_ho) as a_ho, * from (
+select (a_xh ** w_ho) as z_ho, * from (
+select sig(z_xh) as a_xh, * from (
+select (img ** w_xh) as z_xh, * from (
+select transpose(img) as t_c0, * from (
+select * from data, w where id < 10) q_t_c0) q_z_xh) q_a_xh) q_z_ho) q_a_ho) q_diff) q_loss) q_dsqr_loss) q_had_c2) q_dsig_a_ho) q_had_c3) q_t_c4) q_mm_c5) q_dsig_a_xh) q_had_c6) q_mm_c7) q_t_c8) q_mm_c9)
+)
+select * from w;

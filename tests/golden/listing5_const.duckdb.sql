@@ -1,0 +1,6 @@
+with const_c0(i, j, v) as (
+  select a.i, b.j, 1.0 as v
+  from (select generate_series as i from generate_series(1,3)) a,
+       (select generate_series as j from generate_series(1,2)) b
+)
+select * from const_c0 order by i, j;

@@ -1,0 +1,6 @@
+with recursive const_c0(i, j, v) as (
+  select a.i, b.j, 1.0 as v
+  from (with recursive s(x) as (select 1 union all select x+1 from s where x < 3) select x as i from s) a,
+       (with recursive s(x) as (select 1 union all select x+1 from s where x < 2) select x as j from s) b
+)
+select * from const_c0 order by i, j;

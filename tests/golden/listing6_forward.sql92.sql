@@ -1,0 +1,17 @@
+with z_xh(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from img as m inner join w_xh as n on m.j = n.i
+  group by m.i, n.j
+),
+a_xh(i, j, v) as (
+  select i, j, 1/(1+exp(-v)) as v from z_xh
+),
+z_ho(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from a_xh as m inner join w_ho as n on m.j = n.i
+  group by m.i, n.j
+),
+a_ho(i, j, v) as (
+  select i, j, 1/(1+exp(-v)) as v from z_ho
+)
+select * from a_ho order by i, j;

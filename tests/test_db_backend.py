@@ -82,6 +82,34 @@ class TestRelationIO:
         a = RNG.randn(2, 5)
         assert np.allclose(dialect.json_to_matrix(dialect.matrix_to_json(a)), a)
 
+    def test_vectorized_pivot_equals_percell_baseline(self):
+        a = RNG.randn(7, 5)
+        assert relation_io.matrix_to_rows(a) \
+            == relation_io.matrix_to_rows_percell(a)
+        i, j, v = relation_io.matrix_to_columns(a)
+        assert relation_io.columns_to_rows(i, j, v) \
+            == relation_io.matrix_to_rows(a)
+
+    def test_vectorized_and_percell_ingestion_agree(self, monkeypatch):
+        from repro.db import adapter as adapter_mod
+        # force several VALUES batches + several executemany chunks
+        monkeypatch.setattr(adapter_mod.SQLiteAdapter, "ROWS_PER_STMT", 7)
+        monkeypatch.setattr(adapter_mod, "CHUNK_ROWS", 11)
+        a = RNG.randn(6, 9)
+        with connect("sqlite") as ad:
+            relation_io.write_matrix_percell(ad, "base", a)
+            relation_io.write_matrix(ad, "fast", a)
+            ad.create_table("generic", relation_io.MATRIX_COLUMNS)
+            adapter_mod.Adapter.insert_columns(
+                ad, "generic", relation_io.matrix_to_columns(a))
+            base = sorted(ad.execute("select i, j, v from base"))
+            assert sorted(ad.execute("select i, j, v from fast")) == base
+            assert sorted(ad.execute("select i, j, v from generic")) == base
+
+    def test_empty_rows_pivot(self):
+        assert relation_io.rows_to_matrix([], (2, 3)).tolist() \
+            == [[0.0] * 3] * 2
+
 
 # ---------------------------------------------------------------------------
 # dialects & adapters
@@ -128,6 +156,15 @@ class TestDialects:
         else:  # pragma: no cover - only with the [db] extra
             with connect("duckdb") as ad:
                 assert ad.dialect.name == "duckdb"
+
+    @pytest.mark.skipif(not HAVE_DUCKDB, reason="needs the [db] extra")
+    def test_duckdb_register_ingestion(self):  # pragma: no cover - CI job
+        """The Arrow/ndarray register-based bulk path (no per-row Python)."""
+        a = RNG.randn(40, 30)
+        with connect("duckdb") as ad:
+            relation_io.write_matrix(ad, "m", a)
+            assert ad.execute("select count(*) from m") == [(a.size,)]
+            assert np.allclose(relation_io.read_matrix(ad, "m", a.shape), a)
 
 
 # ---------------------------------------------------------------------------
@@ -182,6 +219,23 @@ class TestSQLEngineDifferential:
         env = {"a": RNG.randn(2, 2)}
         out, = Engine("sql").evaluate([E.var("a", (2, 2))], env)
         np.testing.assert_allclose(out, env["a"])
+
+    def test_leaf_digest_invalidated_by_direct_table_write(self):
+        """The unchanged-leaf skip must not serve stale data after
+        db.train (or anyone) replaces a leaf table directly on the shared
+        adapter — create_table invalidates the adapter-level digest."""
+        g, w0, x, y, _ = mlp(n_rows=6, n_hidden=3)
+        eng = Engine("sql")
+        probs1, = eng.evaluate([g.a_ho], {**w0, "img": x})
+        train_in_db(g, w0, x + 0.5, y, 1, adapter=eng._sql.adapter,
+                    strategy="stepped")   # overwrites the img relation
+        probs2, = eng.evaluate([g.a_ho], {**w0, "img": x})
+        np.testing.assert_allclose(probs2, probs1, atol=1e-12)
+        # appends (no create_table) must invalidate too
+        eng._sql.adapter.insert_columns(
+            "img", relation_io.matrix_to_columns(np.ones_like(x)))
+        probs3, = eng.evaluate([g.a_ho], {**w0, "img": x})
+        np.testing.assert_allclose(probs3, probs1, atol=1e-12)
 
     def test_sgd_step_fn_surface(self):
         g, w0, x, y, _ = mlp()

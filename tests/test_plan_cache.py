@@ -1,0 +1,229 @@
+"""The persistent rendered-SQL plan cache (repro.db.plan_cache) and the
+deterministic rendering it depends on (sqlgen.assign_names/dag_signature).
+
+The differential guarantee: results served through a warm cache — including
+one persisted by a *different* "session" (a different DAG build with a
+different name-counter state) — still match Engine("dense") ≤1e-4.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Engine, nn2sql, sqlgen
+from repro.core import expr as E
+from repro.core.autodiff import gradients
+from repro.db.plan_cache import PlanCache, default_path
+from repro.db.sql_engine import SQLEngine
+from repro.db.train import train_in_db
+
+RNG = np.random.RandomState(3)
+TOL = 1e-4
+
+
+def grad_roots():
+    """A loss + gradients DAG full of auto-named nodes (the hard case)."""
+    g = nn2sql.build_graph(nn2sql.MLPSpec(8, 4, 3, 2, lr=0.05))
+    grads = gradients(g.loss, [g.w_xh, g.w_ho])
+    return g, [g.loss, grads[g.w_xh], grads[g.w_ho]]
+
+
+def fresh_structural_twin():
+    """Structurally identical DAG built from scratch (new counter state)."""
+    for _ in range(7):   # shift the global name counter
+        E.const(0.0, (1, 1))
+    img = E.var("img", (8, 4))
+    one_hot = E.var("one_hot", (8, 2))
+    w_xh = E.var("w_xh", (4, 3))
+    w_ho = E.var("w_ho", (3, 2))
+    a_xh = E.sigmoid(E.matmul(img, w_xh, name="z_xh"), name="a_xh")
+    a_ho = E.sigmoid(E.matmul(a_xh, w_ho, name="z_ho"), name="a_ho")
+    loss = E.square(E.sub(a_ho, one_hot, name="diff"), name="loss")
+    grads = gradients(loss, [w_xh, w_ho])
+    return [loss, grads[w_xh], grads[w_ho]]
+
+
+class TestSignature:
+    def test_structural_twins_share_signature_and_sql(self):
+        _, roots = grad_roots()
+        twins = fresh_structural_twin()
+        assert sqlgen.dag_signature(roots) == sqlgen.dag_signature(twins)
+        s1 = sqlgen.to_sql92(roots, select=sqlgen.multi_root_select(roots),
+                             dialect="sqlite")
+        s2 = sqlgen.to_sql92(twins, select=sqlgen.multi_root_select(twins),
+                            dialect="sqlite")
+        assert s1 == s2
+
+    def test_signature_separates_structure_and_extras(self):
+        a, b = E.var("a", (2, 3)), E.var("b", (3, 2))
+        mm = [E.matmul(a, b)]
+        assert sqlgen.dag_signature(mm) != sqlgen.dag_signature(
+            [E.matmul(a, b), E.transpose(a)])
+        assert sqlgen.dag_signature(mm) \
+            != sqlgen.dag_signature([E.matmul(E.var("a", (2, 4)),
+                                              E.var("b", (4, 2)))])
+        assert sqlgen.dag_signature(mm, extra=("sqlite",)) \
+            != sqlgen.dag_signature(mm, extra=("duckdb",))
+        # explicit names are semantic (they name result tables/CTEs)
+        assert sqlgen.dag_signature([E.matmul(a, b, name="p")]) \
+            != sqlgen.dag_signature([E.matmul(a, b, name="q")])
+
+    def test_auto_names_do_not_leak_into_signature(self):
+        a, b = E.var("a", (2, 3)), E.var("b", (3, 2))
+        assert sqlgen.dag_signature([E.matmul(a, b)]) \
+            == sqlgen.dag_signature([E.matmul(a, b)])
+
+    def test_assign_names_keeps_explicit_and_avoids_collisions(self):
+        a = E.var("mm_c0", (2, 2))          # explicit name shaped like a
+        m = E.matmul(a, a)                  # canonical candidate
+        nm = sqlgen.assign_names(E.topo_order(m))
+        assert nm[id(a)] == "mm_c0"
+        assert nm[id(m)] != "mm_c0" and nm[id(m)].startswith("mm_c")
+
+
+class TestPlanCacheStore:
+    def test_memory_roundtrip_and_stats(self):
+        pc = PlanCache(path=None)
+        assert pc.get("k") is None
+        pc.put("k", "select 1;")
+        assert pc.get("k") == "select 1;"
+        assert pc.stats["hits"] == 1 and pc.stats["misses"] == 1
+        assert len(pc) == 1
+        pc.clear()
+        assert pc.get("k") is None
+
+    def test_persistent_across_instances(self, tmp_path):
+        p = str(tmp_path / "plans.db")
+        pc1 = PlanCache(path=p)
+        pc1.put("k", "select 42;", dialect="sqlite")
+        pc1.close()
+        pc2 = PlanCache(path=p)     # a new "session"
+        assert pc2.get("k") == "select 42;"
+        assert pc2.stats["entries"] == 1
+        pc2.close()
+
+    def test_default_path_env_off(self, monkeypatch):
+        monkeypatch.setenv("REPRO_PLAN_CACHE", "off")
+        assert default_path() is None
+        monkeypatch.setenv("REPRO_PLAN_CACHE", "/tmp/x.db")
+        assert default_path() == "/tmp/x.db"
+
+    def test_renderer_fingerprint_part_of_key(self, monkeypatch):
+        """A plan must not outlive the transpiler that rendered it: the
+        sqlgen source fingerprint is folded into every key."""
+        from repro.db import plan_cache as pc
+        _, roots = grad_roots()
+        k1 = pc.plan_key(roots, extra=("sqlite",))
+        monkeypatch.setattr(pc, "_FINGERPRINT", "0123456789abcdef")
+        k2 = pc.plan_key(roots, extra=("sqlite",))
+        assert k1 != k2
+
+    def test_train_in_db_cache_opt_out(self):
+        """plan_cache_=False renders fresh — no default-cache traffic."""
+        from repro.db import plan_cache as pc
+        g = nn2sql.build_graph(nn2sql.MLPSpec(5, 4, 3, 2, lr=0.05))
+        w0 = {k: np.asarray(v)
+              for k, v in nn2sql.init_weights(g.spec).items()}
+        x = RNG.rand(5, 4).astype(np.float32)
+        y = np.eye(2, dtype=np.float32)[RNG.randint(0, 2, 5)]
+        cache = pc.default_cache()
+        h0, m0 = cache.hits, cache.misses
+        train_in_db(g, w0, x, y, 1, plan_cache_=False)
+        assert (cache.hits, cache.misses) == (h0, m0)
+
+    def test_dag_sql_caches_render(self, tmp_path):
+        pc = PlanCache(path=str(tmp_path / "plans.db"))
+        _, roots = grad_roots()
+        d = Engine("sql")._sql.dialect
+        s1 = pc.dag_sql(roots, d, tail="multi_root")
+        s2 = pc.dag_sql(roots, d, tail="multi_root")
+        assert s1 == s2 and pc.hits == 1 and pc.misses == 1
+        assert pc.dag_sql(roots, d, tail="last") != s1  # tail kind keyed
+        with pytest.raises(ValueError):
+            pc.dag_sql(roots, d, tail="sideways")
+
+
+class TestCachedDifferential:
+    def env(self, g):
+        w0 = {k: np.asarray(v) for k, v in nn2sql.init_weights(g.spec).items()}
+        x = RNG.rand(g.spec.n_rows, g.spec.n_features).astype(np.float32)
+        y = np.eye(g.spec.n_classes,
+                   dtype=np.float32)[RNG.randint(0, g.spec.n_classes,
+                                                 g.spec.n_rows)]
+        return {**w0, "img": x, "one_hot": y}
+
+    def test_warm_cache_results_match_dense(self, tmp_path):
+        g, roots = grad_roots()
+        env = self.env(g)
+        jenv = {k: jnp.asarray(v) for k, v in env.items()}
+        ref = [np.asarray(o) for o in Engine("dense").eval_fn(roots)(jenv)]
+        pc = PlanCache(path=str(tmp_path / "plans.db"))
+        cold = SQLEngine(plan_cache_=pc)
+        outs_cold = cold.evaluate(roots, env)
+        assert pc.misses >= 1
+        # a second engine over the same store: rendering fully cached
+        warm = SQLEngine(plan_cache_=pc)
+        before = pc.misses
+        outs_warm = warm.evaluate(roots, env)
+        assert pc.misses == before and pc.hits >= 1
+        for a, b, r in zip(outs_cold, outs_warm, ref):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_allclose(a, r, atol=TOL)
+
+    def test_cross_session_plan_executes_identically(self, tmp_path):
+        """A plan persisted under one DAG build must be byte-valid for a
+        structural twin built in a 'later session'."""
+        g, roots = grad_roots()
+        env = self.env(g)
+        pc = PlanCache(path=str(tmp_path / "plans.db"))
+        outs1 = SQLEngine(plan_cache_=pc).evaluate(roots, env)
+        twins = fresh_structural_twin()
+        warm = SQLEngine(plan_cache_=pc)
+        before = pc.misses
+        outs2 = warm.evaluate(twins, env)
+        assert pc.misses == before   # pure hit
+        for a, b in zip(outs1, outs2):
+            np.testing.assert_array_equal(a, b)
+
+    def test_disabled_cache_still_correct(self):
+        g, roots = grad_roots()
+        env = self.env(g)
+        eng = SQLEngine(plan_cache_=False)
+        assert eng.plans is None
+        outs = eng.evaluate(roots, env)
+        ref = SQLEngine(plan_cache_=PlanCache(path=None)).evaluate(roots, env)
+        for a, b in zip(outs, ref):
+            np.testing.assert_array_equal(a, b)
+
+    def test_unchanged_leaves_not_rewritten(self):
+        g, roots = grad_roots()
+        env = self.env(g)
+        eng = SQLEngine(plan_cache_=PlanCache(path=None))
+        fn = eng.eval_fn(roots)
+        fn(env)
+        writes = []
+        orig = eng.adapter.insert_columns
+        eng.adapter.insert_columns = (
+            lambda name, cols: (writes.append(name), orig(name, cols)))
+        fn(env)                      # identical env — no table rewritten
+        assert writes == []
+        env2 = dict(env, w_xh=env["w_xh"] + 1.0)
+        fn(env2)                     # only the changed leaf is rewritten
+        assert writes == ["w_xh"]
+
+    def test_train_in_db_rendering_cached(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_PLAN_CACHE",
+                           str(tmp_path / "train_plans.db"))
+        from repro.db import plan_cache as pc_mod
+        monkeypatch.setattr(pc_mod, "_default", None)   # fresh singleton
+        g = nn2sql.build_graph(nn2sql.MLPSpec(6, 4, 3, 2, lr=0.05))
+        w0 = {k: np.asarray(v) for k, v in nn2sql.init_weights(g.spec).items()}
+        env = self.env(g)
+        r1 = train_in_db(g, w0, env["img"], env["one_hot"], 2)
+        cache = pc_mod.default_cache()
+        miss0 = cache.misses
+        r2 = train_in_db(g, w0, env["img"], env["one_hot"], 2)
+        assert cache.misses == miss0 and cache.hits >= 1
+        assert r1.sql == r2.sql
+        for k in ("w_xh", "w_ho"):
+            np.testing.assert_array_equal(r1.weights[k], r2.weights[k])
+        monkeypatch.setattr(pc_mod, "_default", None)   # don't leak singleton

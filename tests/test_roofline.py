@@ -6,7 +6,8 @@ import pytest
 
 from repro.configs.base import SHAPES, get_config
 from repro.roofline.analysis import (HBM_BW, LINK_BW, PEAK_FLOPS, Roofline,
-                                     model_flops, parse_collectives)
+                                     cost_analysis, model_flops,
+                                     parse_collectives)
 
 HLO_SAMPLE = """
 HloModule test
@@ -66,8 +67,9 @@ class TestScanAccounting:
 
         xs = jax.ShapeDtypeStruct((64, 128), jnp.float32)
         ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-        f_scan = jax.jit(scanned).lower(xs, ws).compile().cost_analysis()
-        f_unr = jax.jit(unrolled).lower(xs, ws).compile().cost_analysis()
+        # the analysis.cost_analysis shim unwraps jax 0.4.3x's list return
+        f_scan = cost_analysis(jax.jit(scanned).lower(xs, ws).compile())
+        f_unr = cost_analysis(jax.jit(unrolled).lower(xs, ws).compile())
         assert f_unr["flops"] == pytest.approx(8 * f_scan["flops"], rel=0.01)
 
     def test_depth_extrapolation_is_exact_for_identical_layers(self):
@@ -82,8 +84,8 @@ class TestScanAccounting:
 
         xs = jax.ShapeDtypeStruct((32, 64), jnp.float32)
         ws = jax.ShapeDtypeStruct((64, 64), jnp.float32)
-        cost = lambda n: jax.jit(model(n)).lower(xs, ws).compile(
-        ).cost_analysis()["flops"]
+        cost = lambda n: cost_analysis(
+            jax.jit(model(n)).lower(xs, ws).compile())["flops"]
         c1, c2, c5 = cost(1), cost(2), cost(5)
         assert c5 == pytest.approx(c1 + 4 * (c2 - c1), rel=0.01)
 

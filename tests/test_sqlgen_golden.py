@@ -1,0 +1,110 @@
+"""Golden-file snapshots of the SQL transpiler output (tests/golden/*.sql).
+
+Each file pins the byte-exact rendering of one Listing-5…10 query for one
+dialect, so dialect refactors produce a reviewable diff instead of silent
+drift.  The snapshots double as a cross-session determinism check: auto
+name counters must never leak into rendered SQL (the plan-cache contract).
+
+Regenerate after an INTENTIONAL change with:
+
+    REPRO_UPDATE_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_sqlgen_golden.py
+"""
+import os
+import pathlib
+
+import pytest
+
+from repro.core import nn2sql, sqlgen
+from repro.core import expr as E
+from repro.core.autodiff import gradients
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+UPDATE = os.environ.get("REPRO_UPDATE_GOLDEN", "") not in ("", "0")
+
+#: small fixed spec — big enough for every CTE shape, small enough to read
+SPEC = nn2sql.MLPSpec(n_rows=4, n_features=4, n_hidden=3, n_classes=2,
+                      lr=0.05)
+
+
+def graph():
+    return nn2sql.build_graph(SPEC)
+
+
+def forward_roots():
+    return [graph().a_ho]
+
+
+def grad_roots():
+    g = graph()
+    grads = gradients(g.loss, [g.w_xh, g.w_ho])
+    return [g.loss, grads[g.w_xh], grads[g.w_ho]]
+
+
+def multi(roots, dialect):
+    return sqlgen.to_sql92(roots, select=sqlgen.multi_root_select(roots),
+                           dialect=dialect)
+
+
+CASES = {
+    # Listing 5: constant matrix via a series cross join
+    "listing5_const.sql92":
+        lambda: sqlgen.to_sql92([E.const(1.0, (3, 2))], dialect="sql92"),
+    "listing5_const.sqlite":
+        lambda: sqlgen.to_sql92([E.const(1.0, (3, 2))], dialect="sqlite"),
+    "listing5_const.duckdb":
+        lambda: sqlgen.to_sql92([E.const(1.0, (3, 2))], dialect="duckdb"),
+    # Listing 6/8: the forward inference query m(x)
+    "listing6_forward.sql92":
+        lambda: sqlgen.to_sql92(forward_roots(), dialect="sql92"),
+    "listing6_forward.sqlite":
+        lambda: sqlgen.to_sql92(forward_roots(), dialect="sqlite"),
+    "listing6_forward.duckdb":
+        lambda: sqlgen.to_sql92(forward_roots(), dialect="duckdb"),
+    # Algorithm 1 gradients as one multi-root statement (SQLEngine's shape)
+    "gradients_multiroot.sqlite":
+        lambda: multi(grad_roots(), "sqlite"),
+    # Listing 7: the recursive training query (sql92 / duckdb verbatim)
+    "listing7_training.sql92":
+        lambda: sqlgen.training_query_sql92(graph(), 10, SPEC.lr, "sql92"),
+    "listing7_training.duckdb":
+        lambda: sqlgen.training_query_sql92(graph(), 10, SPEC.lr, "duckdb"),
+    # Listing 7 stepped: INSERT…SELECT (the sqlite-executable step)
+    "listing7_step.sqlite":
+        lambda: sqlgen.training_step_sql92(graph(), SPEC.lr, "sqlite"),
+    # Listing 10: array-typed recursion (paper operators + UDF calls)
+    "listing10_training_arrays.sql":
+        lambda: sqlgen.training_query_arrays(graph(), 10, SPEC.lr),
+    "listing10_training_array_calls.sqlite":
+        lambda: sqlgen.training_query_array_calls(graph(), 10, SPEC.lr),
+    # Listing 10 style nested forward select
+    "listing10_forward_arrays.sql":
+        lambda: sqlgen.to_sql_arrays(forward_roots()),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden(name):
+    rendered = CASES[name]()
+    path = GOLDEN_DIR / (name + ".sql" if not name.endswith(".sql")
+                         else name)
+    if UPDATE:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(rendered + "\n")
+        pytest.skip(f"regenerated {path.name}")
+    assert path.exists(), (f"missing golden file {path}; regenerate with "
+                           f"REPRO_UPDATE_GOLDEN=1")
+    expected = path.read_text().rstrip("\n")
+    assert rendered == expected, (
+        f"{name} drifted from tests/golden/{path.name} — if intentional, "
+        f"regenerate with REPRO_UPDATE_GOLDEN=1 and review the diff")
+
+
+def test_rendering_is_counter_independent():
+    """Golden stability precondition: shifting the global auto-name counter
+    between builds must not change any rendered snapshot."""
+    before = {name: fn() for name, fn in CASES.items()}
+    nn2sql.build_graph.cache_clear()
+    for _ in range(11):
+        E.const(0.0, (1, 1))
+    after = {name: fn() for name, fn in CASES.items()}
+    assert before == after

@@ -73,7 +73,9 @@ def mnist_like(spec, seed=0):
 # ---------------------------------------------------------------------------
 
 def bench_ingestion(w, backend: str, timing_iters: int) -> dict:
-    """Per-cell baseline vs vectorized ingestion of the weight relation."""
+    """Per-cell baseline vs vectorized ingestion of the weight relation,
+    plus the table-valued JSON path (``json_each`` expansion inside the
+    engine) raced against the multi-row VALUES path where available."""
     pivot_percell = wall(lambda: relation_io.matrix_to_rows_percell(w),
                          timing_iters)
     pivot_vec = wall(lambda: relation_io.matrix_to_columns(w), timing_iters)
@@ -83,9 +85,14 @@ def bench_ingestion(w, backend: str, timing_iters: int) -> dict:
             timing_iters)
         write_vec = wall(lambda: relation_io.write_matrix(ad, "w_ing", w),
                          timing_iters)
+        write_json = None
+        if ad.supports_json_ingest:
+            write_json = wall(
+                lambda: relation_io.write_matrix_json(ad, "w_ing", w),
+                timing_iters)
         n, = ad.execute("select count(*) from w_ing")[0]
     assert n == w.size
-    return {
+    out = {
         "matrix": f"{w.shape[0]}x{w.shape[1]}",
         "cells": int(w.size),
         "backend": backend,
@@ -100,6 +107,12 @@ def bench_ingestion(w, backend: str, timing_iters: int) -> dict:
         # by the row-at-a-time storage model on sqlite)
         "write_speedup": write_percell / write_vec,
     }
+    if write_json is not None:
+        out["write_json_s"] = write_json
+        # >1 means the engine-side json_each expansion beats client-side
+        # multi-row VALUES (expected on JSON-optimised sqlite ≥3.38)
+        out["json_vs_values"] = write_vec / write_json
+    return out
 
 
 def bench_forward_grad(graph, w0, x, y, backend: str, timing_iters: int,
@@ -198,8 +211,16 @@ def run(args) -> dict:
     graph = nn2sql.build_graph(spec)
     w0 = {k: np.asarray(v) for k, v in nn2sql.init_weights(spec).items()}
     x, y, _ = mnist_like(spec)
+    requested = args.backend
     backend = ("duckdb" if HAVE_DUCKDB else "sqlite") \
         if args.backend == "auto" else args.backend
+    if backend == "duckdb" and not HAVE_DUCKDB:
+        if not args.fallback_sqlite:
+            raise SystemExit("duckdb is not importable; rerun with "
+                             "--fallback-sqlite to record a sqlite run")
+        print("!! duckdb wheel not importable in this environment — "
+              "falling back to sqlite (recorded in the report)", flush=True)
+        backend = "sqlite"
 
     print(f"== MNIST-scale in-DB benchmark: {spec.n_rows}x{spec.n_features}"
           f" -> {spec.n_hidden} -> {spec.n_classes}, backend={backend} ==")
@@ -212,6 +233,9 @@ def run(args) -> dict:
           f"{ingestion['write_percell_s']*1e3:.1f} -> "
           f"{ingestion['write_vectorized_s']*1e3:.1f} ms "
           f"({ingestion['write_speedup']:.1f}x)", flush=True)
+    if "write_json_s" in ingestion:
+        print(f"ingestion json_each: {ingestion['write_json_s']*1e3:.1f} ms "
+              f"({ingestion['json_vs_values']:.2f}x vs VALUES)", flush=True)
 
     fwd = bench_forward_grad(graph, w0, x, y, backend, args.timing_iters,
                              args.with_relational)
@@ -240,6 +264,7 @@ def run(args) -> dict:
         "config": {"rows": spec.n_rows, "features": spec.n_features,
                    "hidden": spec.n_hidden, "classes": spec.n_classes,
                    "lr": spec.lr, "iters": args.iters, "backend": backend,
+                   "requested_backend": requested,
                    "have_duckdb": HAVE_DUCKDB},
         "ingestion": ingestion,
         "forward_grad": fwd,
@@ -275,6 +300,12 @@ def main():
     ap.add_argument("--with-relational", action="store_true",
                     help="also time Engine('relational') (memory-hungry "
                          "at MNIST scale)")
+    ap.add_argument("--fallback-sqlite", action="store_true",
+                    help="when --backend duckdb but the wheel is missing, "
+                         "run sqlite and record the fallback instead of "
+                         "failing (used to commit a placeholder artifact "
+                         "in containers without the wheel; the CI "
+                         "duckdb-extras job regenerates the real one)")
     ap.add_argument("--out", default="BENCH_db_mnist.json")
     args = ap.parse_args()
 

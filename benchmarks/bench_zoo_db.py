@@ -1,0 +1,180 @@
+"""DAG-zoo-in-SQL smoke benchmark: MoE dispatch and RWKV scan, SQL vs jax.
+
+Times the two §8-outlook transpilations (``repro.db.zoo``) against their
+jax references and checks the ≤1e-4 differential contract on the way:
+
+* **MoE** — the fully-in-DB gated layer (route → per-expert SwiGLU →
+  combine) vs ``zoo.moe_ffn_ref`` (jnp, identical semantics), plus the
+  relational dispatch/combine pair vs ``kernels/ref.moe_dispatch`` /
+  ``moe_combine``;
+* **RWKV** — the time-mix recurrence (ONE recursive CTE over the
+  flattened N² state) vs ``kernels/ref.rwkv6_scan``, and the token-shift
+  channel mix vs its numpy oracle.
+
+Emits ``BENCH_zoo_db.json``.  CI runs it on sqlite (tier-1 smoke) and on
+duckdb (extras job) and uploads the artifact.
+
+Run:  PYTHONPATH=src python benchmarks/bench_zoo_db.py
+CI smoke:  … bench_zoo_db.py --tokens 8 --seq 6
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from common import timeit            # script mode (CI invocation)
+except ImportError:  # pragma: no cover - package mode
+    from .common import timeit
+from repro.db import HAVE_DUCKDB, zoo
+from repro.db.sql_engine import SQLEngine
+from repro.kernels import ref
+
+TOL = 1e-4
+
+
+def wall(fn, iters=3):
+    """Shared warmup+median timing (benchmarks/common.py)."""
+    return timeit(fn, iters=iters)
+
+
+def bench_moe(args, backend: str) -> dict:
+    cfg = zoo.MoESQLConfig(n_tokens=args.tokens, d_model=args.d_model,
+                           n_experts=args.experts, top_k=args.top_k,
+                           d_ff=args.d_ff)
+    params = zoo.init_moe_params(cfg)
+    rng = np.random.RandomState(0)
+    x = rng.randn(cfg.n_tokens, cfg.d_model).astype(np.float32)
+
+    out_ref = zoo.moe_ffn_ref(cfg, params, x)
+    t_jax = wall(lambda: zoo.moe_ffn_ref(cfg, params, x), args.timing_iters)
+
+    eng = SQLEngine(backend=backend)
+    graph = zoo.moe_ffn_graph(cfg)
+    env = zoo.moe_env(cfg, params, x)
+    fn = eng.eval_fn([graph.out])
+    out_db, = fn(env)
+    t_sql = wall(lambda: fn(env), args.timing_iters)
+
+    # relational dispatch/combine pair vs the kernel references
+    t, k = cfg.n_tokens, cfg.top_k
+    tok = np.tile(np.arange(t, dtype=np.int32), (k, 1)).T.reshape(-1)
+    gates = rng.rand(t * k).astype(np.float32)
+    disp, _, _, _ = zoo.moe_dispatch_graph(t, cfg.d_model, t * k)
+    denv = {"x": x, "slot_token": tok.reshape(-1, 1).astype(np.float64),
+            "slot_gate": gates.reshape(-1, 1).astype(np.float64)}
+    dfn = eng.eval_fn([disp])
+    disp_db, = dfn(denv)
+    disp_ref = np.asarray(ref.moe_dispatch(jnp.asarray(x), jnp.asarray(tok),
+                                           jnp.asarray(gates)))
+    t_disp_sql = wall(lambda: dfn(denv), args.timing_iters)
+    t_disp_jax = wall(lambda: jax.block_until_ready(
+        ref.moe_dispatch(jnp.asarray(x), jnp.asarray(tok),
+                         jnp.asarray(gates))), args.timing_iters)
+    eng.close()
+
+    err_layer = float(np.abs(out_db - out_ref).max())
+    err_disp = float(np.abs(disp_db - disp_ref).max())
+    return {
+        "config": dataclasses.asdict(cfg),
+        "layer_jax_s": t_jax, "layer_sql_s": t_sql,
+        "dispatch_jax_s": t_disp_jax, "dispatch_sql_s": t_disp_sql,
+        "layer_max_err": err_layer, "dispatch_max_err": err_disp,
+        "within_tol": bool(err_layer < TOL and err_disp < TOL),
+    }
+
+
+def bench_rwkv(args, backend: str) -> dict:
+    s, n = args.seq, args.heads_n
+    rng = np.random.RandomState(1)
+    r, k, v = [rng.randn(s, n).astype(np.float32) * 0.5 for _ in range(3)]
+    w = (rng.rand(s, n) * 0.5 + 0.3).astype(np.float32)
+    u = (rng.randn(n) * 0.5).astype(np.float32)
+    s0 = (rng.randn(n, n) * 0.3).astype(np.float32)
+
+    def jref():
+        return jax.block_until_ready(ref.rwkv6_scan(
+            jnp.asarray(r[None]), jnp.asarray(k[None]), jnp.asarray(v[None]),
+            jnp.asarray(w[None]), jnp.asarray(u[None]),
+            jnp.asarray(s0[None])))
+
+    o_ref, sfin_ref = jref()
+    t_jax = wall(jref, args.timing_iters)
+
+    eng = SQLEngine(backend=backend)
+    graph = zoo.rwkv6_time_mix_graph(s, n)
+    env = zoo.rwkv6_env(r, k, v, w, u, s0)
+    fn = eng.eval_fn([graph.o, graph.state])
+    o_db, states = fn(env)
+    t_sql = wall(lambda: fn(env), args.timing_iters)
+
+    # channel mix
+    d, f = n, 2 * n
+    x = rng.randn(s, d).astype(np.float32)
+    mu_k, mu_r = rng.rand(d), rng.rand(d)
+    wk, wv_, wr = (rng.randn(d, f) * 0.3, rng.randn(f, d) * 0.3,
+                   rng.randn(d, d) * 0.3)
+    cm_db = zoo.run_channel_mix_in_db(x, mu_k, mu_r, wk, wv_, wr,
+                                      engine=eng)
+    cm_ref = zoo.rwkv_channel_mix_ref(x, mu_k, mu_r, wk, wv_, wr)
+    eng.close()
+
+    err_o = float(np.abs(np.asarray(o_ref[0]) - o_db).max())
+    err_s = float(np.abs(np.asarray(sfin_ref[0]).reshape(-1)
+                         - states[-1]).max())
+    err_cm = float(np.abs(cm_db - cm_ref).max())
+    return {
+        "config": {"seq": s, "n": n},
+        "time_mix_jax_s": t_jax, "time_mix_sql_s": t_sql,
+        "o_max_err": err_o, "state_max_err": err_s,
+        "channel_mix_max_err": err_cm,
+        "within_tol": bool(max(err_o, err_s, err_cm) < TOL),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--d-model", type=int, default=8)
+    ap.add_argument("--experts", type=int, default=4)
+    ap.add_argument("--top-k", type=int, default=2)
+    ap.add_argument("--d-ff", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=12)
+    ap.add_argument("--heads-n", type=int, default=4,
+                    help="head dim N (state is N^2 columns)")
+    ap.add_argument("--timing-iters", type=int, default=3)
+    ap.add_argument("--backend", default="sqlite",
+                    choices=["sqlite", "duckdb", "auto"])
+    ap.add_argument("--out", default="BENCH_zoo_db.json")
+    args = ap.parse_args()
+    backend = ("duckdb" if HAVE_DUCKDB else "sqlite") \
+        if args.backend == "auto" else args.backend
+
+    print(f"== DAG-zoo-in-SQL smoke, backend={backend} ==")
+    moe = bench_moe(args, backend)
+    print(f"moe layer: jax {moe['layer_jax_s']*1e3:8.1f} ms | sql "
+          f"{moe['layer_sql_s']*1e3:8.1f} ms | max err "
+          f"{moe['layer_max_err']:.2e}", flush=True)
+    rwkv = bench_rwkv(args, backend)
+    print(f"rwkv scan: jax {rwkv['time_mix_jax_s']*1e3:8.1f} ms | sql "
+          f"{rwkv['time_mix_sql_s']*1e3:8.1f} ms | max err "
+          f"{rwkv['o_max_err']:.2e}", flush=True)
+
+    report = {"backend": backend, "have_duckdb": HAVE_DUCKDB,
+              "moe": moe, "rwkv": rwkv,
+              "checks": {"moe_within_1e-4": moe["within_tol"],
+                         "rwkv_within_1e-4": rwkv["within_tol"]}}
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}\nchecks: {report['checks']}")
+    return 0 if all(report["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

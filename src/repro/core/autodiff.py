@@ -38,6 +38,32 @@ class MapDeriv(E.Expr):
         return (self.x, self.fx)
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class ReduceDeriv(E.Expr):
+    """The argmax indicator of a cached max-RowReduce: 1 where ``x`` equals
+    its row's (axis=1) / column's (axis=0) cached maximum, else 0.  Ties
+    all receive 1 (the subgradient convention every engine and the SQL
+    lowering share — what matters for the differential tests is that the
+    three backends agree)."""
+
+    x: E.Expr = None          # the input of the RowReduce node
+    red: E.Expr = None        # the RowReduce node itself (cached max)
+    axis: int = 1
+
+    def children(self):
+        return (self.x, self.red)
+
+
+def _expand(reduced: E.Expr, axis: int, shape: tuple[int, int]) -> E.Expr:
+    """Broadcast a keepdims reduce back to ``shape`` with a ones matmul:
+    (r, 1) · 1_{1×c} for axis=1, 1_{r×1} · (1, c) for axis=0 — no new node
+    type needed, the constant ones matrix is Listing 5's series cross
+    join."""
+    if axis == 1:
+        return E.matmul(reduced, E.const(1.0, (1, shape[1])))
+    return E.matmul(E.const(1.0, (shape[0], 1)), reduced)
+
+
 def derive(z: E.Expr, seed: E.Expr, grads: dict[E.Var, E.Expr] | None = None
            ) -> dict[E.Var, E.Expr]:
     """Algorithm 1. Returns {leaf Var: gradient expression}."""
@@ -66,6 +92,40 @@ def derive(z: E.Expr, seed: E.Expr, grads: dict[E.Var, E.Expr] | None = None
         derive(z.x, E.scale(z.c, seed), grads)
     elif isinstance(z, E.Transpose):
         derive(z.x, E.transpose(seed), grads)
+    elif isinstance(z, E.RowReduce):
+        bseed = _expand(seed, z.axis, z.x.shape)      # broadcast back
+        if z.kind == "sum":
+            derive(z.x, bseed, grads)
+        else:                                          # max: argmax indicator
+            ind = ReduceDeriv(name=f"dmax_{z.name}", shape=z.x.shape,
+                              x=z.x, red=z, axis=z.axis)
+            if E.is_auto_named(z):  # name embeds z's counter suffix
+                E.mark_auto_named(ind)
+            derive(z.x, E.hadamard(bseed, ind), grads)
+    elif isinstance(z, E.Softmax):
+        # d/dx softmax(x) @ g = s ∘ (g − rowsum(g ∘ s)·1ᵀ), s cached
+        gs = E.hadamard(seed, z)
+        rowsum = E.row_reduce(gs, "sum", axis=1)
+        derive(z.x, E.hadamard(z, E.sub(seed, _expand(rowsum, 1, z.shape))),
+               grads)
+    elif isinstance(z, E.ArgTopK):
+        pass  # selection mask: zero gradient everywhere (like Const)
+    elif isinstance(z, E.Gather):
+        derive(z.x, E.scatter(seed, z.idx, z.x.shape[0]), grads)
+    elif isinstance(z, E.Scatter):
+        derive(z.x, E.gather(seed, z.idx), grads)
+    elif isinstance(z, E.RowShift):
+        derive(z.x, E.row_shift(seed, -z.offset), grads)
+    elif isinstance(z, E.Recurrence):
+        # The adjoint of an affine scan is the same scan run the other way:
+        #   λ_t = g_t + a_{t+1} ∘ λ_{t+1}  (forward z; mirrored if reverse)
+        # then ∂b = λ and ∂a_t = λ_t ∘ s_{t∓1} with s the cached output.
+        step = -1 if not z.reverse else 1
+        a_next = E.row_shift(z.a, step)       # a_next[t] = a[t+1] (fwd case)
+        lam = E.recurrence(a_next, seed, reverse=not z.reverse)
+        s_prev = E.row_shift(z, -step)        # s_prev[t] = s[t-1] (fwd case)
+        derive(z.b, lam, grads)
+        derive(z.a, E.hadamard(lam, s_prev), grads)
     elif isinstance(z, E.Const):
         pass  # constants carry no gradient
     elif isinstance(z, E.Var):

@@ -17,6 +17,24 @@ Node types mirror the paper's building blocks (Listing 4):
   Transpose  Xᵀ           index rename
   Var        leaf         a stored table (weights / data)
   Const      literal      generate_series-style constant matrix
+
+The **DAG-zoo tier** (paper §8 outlook: "the relational building blocks
+generalize beyond MLPs") extends the IR beyond dense 2-D algebra — each
+node still denotes a dense matrix relation, so the inner-join/dense-cell
+invariants of the base tier carry over:
+
+  RowReduce  Σ/max over one axis     GROUP BY with sum()/max(), keepdims
+  Softmax    row-wise softmax        exp/max/sum joins (numerically stable)
+  ArgTopK    top-k indicator mask    window rank (or correlated count)
+  Gather     row-index select        self-join on an index relation
+  Scatter    row-index accumulate    join + GROUP BY, zero-filled frame
+  RowShift   shift rows, zero fill   index arithmetic + frame left join
+  Recurrence s_t = a_t∘s_{t-1}+b_t   recursive CTE (the Listing-7 machinery)
+
+Index relations (the ``idx`` child of Gather/Scatter) are ordinary
+``{[i, j, v]}`` matrices of shape (S, 1) whose *values* are 0-based row
+numbers — at the SQL boundary the lowering adds the +1 of the 1-based
+storage convention.
 """
 from __future__ import annotations
 
@@ -165,6 +183,12 @@ class MapFn:
     sql: Callable[[str], str]
 
 
+RECIP = MapFn(
+    name="recip",
+    fn=lambda x: 1.0 / x,
+    df=lambda x, out: -out * out,
+    sql=lambda v: f"1.0/({v})",
+)
 SIGMOID = MapFn(
     name="sig",
     fn=lambda x: 1.0 / (1.0 + jnp.exp(-x)),
@@ -190,7 +214,7 @@ ONE_MINUS = MapFn(
     sql=lambda v: f"1-{v}",
 )
 
-MAP_FNS = {f.name: f for f in (SIGMOID, SQUARE, RELU, ONE_MINUS)}
+MAP_FNS = {f.name: f for f in (SIGMOID, SQUARE, RELU, ONE_MINUS, RECIP)}
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -200,6 +224,114 @@ class Map(Expr):
 
     def children(self):
         return (self.x,)
+
+
+# ---------------------------------------------------------------------------
+# DAG-zoo tier (reductions, gather/scatter, shift, scan)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RowReduce(Expr):
+    """Reduce one axis with ``sum`` or ``max``, keepdims: axis=1 collapses
+    columns (shape (r, 1)), axis=0 collapses rows (shape (1, c)).  Lowers to
+    GROUP BY over the kept index."""
+
+    x: Expr = None
+    kind: str = "sum"        # "sum" | "max"
+    axis: int = 1
+
+    def children(self):
+        return (self.x,)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Softmax(Expr):
+    """Row-wise (axis=1) numerically stable softmax.  Lowers to a join
+    against the per-row max/denominator aggregate."""
+
+    x: Expr = None
+
+    def children(self):
+        return (self.x,)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ArgTopK(Expr):
+    """The 0/1 indicator of each row's ``k`` largest entries (ties broken
+    toward the smaller column index).  This is the relational rendering of
+    an arg-result: a set of (i, j) pairs IS a sparse relation of ones —
+    Listing 5's one-hot construction — kept dense here so downstream
+    inner joins stay aligned.  Non-differentiable (selection): gradients
+    flow through the values the mask is *applied to*, never the mask."""
+
+    x: Expr = None
+    k: int = 1
+
+    def children(self):
+        return (self.x,)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Gather(Expr):
+    """Row-index select: ``out[s, :] = x[idx[s], :]``.  ``idx`` is an index
+    relation — an (S, 1) matrix whose values are 0-based row numbers of
+    ``x``.  Lowers to a self-join of ``x`` against the index relation.
+    Index values MUST lie in 0..rows(x)-1: eager dense/relational
+    evaluation raises on violations, jit/SQL behaviour is
+    backend-defined (clamp vs. zero-fill)."""
+
+    x: Expr = None
+    idx: Expr = None
+
+    def children(self):
+        return (self.x, self.idx)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Scatter(Expr):
+    """Row-index accumulate (Gather's adjoint): ``out[r, :] = Σ_{s:
+    idx[s]=r} x[s, :]`` with ``shape[0]`` output rows.  Lowers to the join
+    + GROUP BY sum, left-joined onto a zero frame so rows that receive no
+    tuples stay present (dense-relation invariant)."""
+
+    x: Expr = None
+    idx: Expr = None
+
+    def children(self):
+        return (self.x, self.idx)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RowShift(Expr):
+    """Shift rows by ``offset`` (positive = down / toward larger i), zero
+    fill: ``out[t, :] = x[t - offset, :]`` where defined, else 0.  The
+    token-shift of RWKV and the boundary operator of Recurrence's autodiff
+    rule."""
+
+    x: Expr = None
+    offset: int = 1
+
+    def children(self):
+        return (self.x,)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Recurrence(Expr):
+    """Elementwise affine scan down the rows (each column independent):
+
+        forward:  s_t = a_t ∘ s_{t-1} + b_t,   s_0 = 0,   t = 1..T
+        reverse:  s_t = a_t ∘ s_{t+1} + b_t,   s_{T+1} = 0,   t = T..1
+
+    A non-zero initial state folds into ``b``: b₁' = a₁ ∘ s₀ + b₁.  Lowers
+    to a recursive CTE — the Listing-7 recursion machinery, one tuple per
+    (t, j) walking its own column chain (queue semantics compatible)."""
+
+    a: Expr = None
+    b: Expr = None
+    reverse: bool = False
+
+    def children(self):
+        return (self.a, self.b)
 
 
 # ---------------------------------------------------------------------------
@@ -271,6 +403,64 @@ def square(x: Expr, name=None) -> Map:
 
 def relu(x: Expr, name=None) -> Map:
     return mapfn(RELU, x, name)
+
+
+def recip(x: Expr, name=None) -> Map:
+    return mapfn(RECIP, x, name)
+
+
+def row_reduce(x: Expr, kind: str = "sum", axis: int = 1, name=None
+               ) -> RowReduce:
+    if kind not in ("sum", "max"):
+        raise ValueError(f"row_reduce kind {kind!r}; have 'sum'/'max'")
+    if axis not in (0, 1):
+        raise ValueError(f"row_reduce axis {axis!r}; have 0/1")
+    shape = (x.shape[0], 1) if axis == 1 else (1, x.shape[1])
+    return _named(RowReduce(name=name or _fresh(f"r{kind}"), shape=shape,
+                            x=x, kind=kind, axis=axis), name)
+
+
+def softmax(x: Expr, name=None) -> Softmax:
+    return _named(Softmax(name=name or _fresh("smax"), shape=x.shape, x=x),
+                  name)
+
+
+def argtopk(x: Expr, k: int, name=None) -> ArgTopK:
+    if not 1 <= k <= x.shape[1]:
+        raise ValueError(f"argtopk k={k} outside 1..{x.shape[1]}")
+    return _named(ArgTopK(name=name or _fresh("topk"), shape=x.shape,
+                          x=x, k=int(k)), name)
+
+
+def gather(x: Expr, idx: Expr, name=None) -> Gather:
+    if idx.shape[1] != 1:
+        raise ValueError(f"gather index relation must be (S, 1), "
+                         f"got {idx.shape}")
+    return _named(Gather(name=name or _fresh("gath"),
+                         shape=(idx.shape[0], x.shape[1]), x=x, idx=idx),
+                  name)
+
+
+def scatter(x: Expr, idx: Expr, n_rows: int, name=None) -> Scatter:
+    if idx.shape != (x.shape[0], 1):
+        raise ValueError(f"scatter index relation must be ({x.shape[0]}, 1),"
+                         f" got {idx.shape}")
+    return _named(Scatter(name=name or _fresh("scat"),
+                          shape=(int(n_rows), x.shape[1]), x=x, idx=idx),
+                  name)
+
+
+def row_shift(x: Expr, offset: int = 1, name=None) -> RowShift:
+    return _named(RowShift(name=name or _fresh("shift"), shape=x.shape,
+                           x=x, offset=int(offset)), name)
+
+
+def recurrence(a: Expr, b: Expr, reverse: bool = False, name=None
+               ) -> Recurrence:
+    if a.shape != b.shape:
+        raise ValueError(f"recurrence shapes: {a.shape} vs {b.shape}")
+    return _named(Recurrence(name=name or _fresh("rec"), shape=a.shape,
+                             a=a, b=b, reverse=bool(reverse)), name)
 
 
 # ---------------------------------------------------------------------------

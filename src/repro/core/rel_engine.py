@@ -3,11 +3,18 @@
 Mirrors ``core.dense`` but every node is computed with the relational
 building blocks of Listing 4; each memoised node is one CTE of the generated
 query (``core.sqlgen`` prints the actual SQL for the same DAG).
+
+The DAG-zoo tier (RowReduce/Softmax/ArgTopK/Gather/Scatter/RowShift/
+Recurrence) evaluates through ``dense.eval_node`` on the densified children
+and re-pivots the result — the relations stay canonical (dense cell set),
+so the round trip is exact; the genuinely relational execution of these
+nodes is the generated SQL itself (``core.sqlgen`` → ``repro.db``).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from . import dense
 from . import expr as E
 from .autodiff import MapDeriv
 from .relational import RelTensor
@@ -44,8 +51,9 @@ def evaluate(roots: list[E.Expr], env: dict[str, RelTensor]) -> list[RelTensor]:
                             shape=xv.shape)
         elif isinstance(node, E.Map):
             out = ev(node.x).map(node.fn.fn)
-        else:  # pragma: no cover
-            raise TypeError(f"unknown node {type(node)}")
+        else:  # zoo tier (and ReduceDeriv): shared dense semantics
+            out = RelTensor.from_dense(
+                dense.eval_node(node, lambda c: ev(c).to_dense()))
         cache[id(node)] = out
         return out
 

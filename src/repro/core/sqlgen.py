@@ -26,7 +26,7 @@ from __future__ import annotations
 import hashlib
 
 from . import expr as E
-from .autodiff import MapDeriv, derive
+from .autodiff import MapDeriv, ReduceDeriv, derive
 
 
 def _get_dialect(dialect):
@@ -89,6 +89,19 @@ def dag_signature(roots: list[E.Expr], extra=()) -> str:
             fields.append(repr(n.c))
         elif isinstance(n, (E.Map, MapDeriv)):
             fields.append(n.fn.name)
+        # zoo tier: static attributes are part of the rendered SQL, so two
+        # DAGs differing only in (k, kind, axis, offset, direction) must
+        # never share a cached plan
+        elif isinstance(n, E.RowReduce):
+            fields.append(f"{n.kind}:{n.axis}")
+        elif isinstance(n, E.ArgTopK):
+            fields.append(f"k={n.k}")
+        elif isinstance(n, E.RowShift):
+            fields.append(f"off={n.offset}")
+        elif isinstance(n, E.Recurrence):
+            fields.append(f"rev={int(n.reverse)}")
+        elif isinstance(n, ReduceDeriv):
+            fields.append(f"axis={n.axis}")
         fields += [str(idx[id(c)]) for c in n.children()]
         parts.append("|".join(fields))
     parts.append("roots:" + ",".join(str(idx[id(r)]) for r in roots))
@@ -124,12 +137,76 @@ def _cte_sql(node: E.Expr, nm: dict[int, str], dialect) -> str:
         if node.fn is E.RELU:
             return (f"select i, j, case when v > 0 then 1 else 0 end as v"
                     f" from {n(node.x)}")
+        if node.fn is E.RECIP:    # -1/x² = -out² from the cached CTE
+            return f"select i, j, -(v*v) as v from {n(node.fx)}"
         raise NotImplementedError(node.fn.name)
+    if isinstance(node, ReduceDeriv):  # argmax indicator from the cached max
+        on = "i" if node.axis == 1 else "j"
+        return (f"select m.i, m.j, case when m.v = r.v then 1.0 else 0.0 end"
+                f" as v\n  from {n(node.x)} as m inner join {n(node.red)}"
+                f" as r on m.{on} = r.{on}")
     if isinstance(node, E.Map):
         return f"select i, j, {dialect.map_sql(node.fn, 'v')} as v from {n(node.x)}"
     if isinstance(node, E.Const):
         rows, cols = node.shape
         return dialect.const_select(rows, cols, node.value)
+    if isinstance(node, E.RowReduce):
+        if node.axis == 1:
+            return (f"select i, 1 as j, {node.kind}(v) as v"
+                    f" from {n(node.x)}\n  group by i")
+        return (f"select 1 as i, j, {node.kind}(v) as v"
+                f" from {n(node.x)}\n  group by j")
+    if isinstance(node, E.Softmax):
+        # stable row softmax: subtract the row max, normalise by the row
+        # sum — both aggregates in one derived table joined back on i
+        src = n(node.x)
+        return (f"select m.i, m.j, exp(m.v - d.mx) / d.den as v\n"
+                f"  from {src} as m inner join (\n"
+                f"    select e.i, e.mx, sum(exp(e2.v - e.mx)) as den\n"
+                f"      from (select i, max(v) as mx from {src}"
+                f" group by i) e\n"
+                f"      inner join {src} as e2 on e2.i = e.i\n"
+                f"     group by e.i, e.mx\n"
+                f"  ) d on m.i = d.i")
+    if isinstance(node, E.ArgTopK):
+        return dialect.topk_mask_select(n(node.x), node.k)
+    if isinstance(node, E.Gather):
+        # self-join on the index relation: idx values are 0-based row
+        # numbers, storage is 1-based
+        return (f"select g.i, m.j, m.v\n"
+                f"  from {n(node.idx)} as g inner join {n(node.x)} as m"
+                f" on m.i = cast(g.v as integer) + 1")
+    if isinstance(node, E.Scatter):
+        rows, cols = node.shape
+        return (f"select a.i, b.j, coalesce(acc.v, 0.0) as v\n"
+                f"  from {dialect.frame_from(rows, cols)}\n"
+                f"  left join (\n"
+                f"    select cast(g.v as integer) + 1 as i, m.j,"
+                f" sum(m.v) as v\n"
+                f"      from {n(node.idx)} as g inner join {n(node.x)} as m"
+                f" on m.i = g.i\n"
+                f"     group by cast(g.v as integer) + 1, m.j\n"
+                f"  ) acc on acc.i = a.i and acc.j = b.j")
+    if isinstance(node, E.RowShift):
+        rows, cols = node.shape
+        return (f"select a.i, b.j, coalesce(m.v, 0.0) as v\n"
+                f"  from {dialect.frame_from(rows, cols)}\n"
+                f"  left join {n(node.x)} as m"
+                f" on m.i = a.i - ({node.offset}) and m.j = b.j")
+    if isinstance(node, E.Recurrence):
+        # the Listing-7 machinery: anchor row + self-joining recursive
+        # member; each (t, j) tuple walks its own column chain, so sqlite's
+        # row-at-a-time queue semantics and duckdb's set semantics agree
+        me, a, b = nm[id(node)], n(node.a), n(node.b)
+        t_rows = node.shape[0]
+        anchor, nxt = (1, "r.i + 1") if not node.reverse \
+            else (t_rows, "r.i - 1")
+        return (f"select m.i, m.j, m.v from {b} as m where m.i = {anchor}\n"
+                f"  union all\n"
+                f"  select {nxt}, r.j, am.v * r.v + bm.v\n"
+                f"    from {me} as r\n"
+                f"    inner join {a} as am on am.i = {nxt} and am.j = r.j\n"
+                f"    inner join {b} as bm on bm.i = {nxt} and bm.j = r.j")
     raise TypeError(type(node))
 
 
@@ -140,19 +217,27 @@ def _with_keyword(dialect, recursive: bool = False) -> str:
         else "with"
 
 
+def _render_ctes(roots: list[E.Expr], dialect
+                 ) -> tuple[list[str], dict[int, str], bool]:
+    """(ctes, id→name map, whether a self-referencing scan is present)."""
+    order = E.topo_order(*roots)
+    nm = assign_names(order)
+    ctes: list[str] = []
+    has_scan = False
+    for node in order:
+        has_scan = has_scan or isinstance(node, E.Recurrence)
+        if not isinstance(node, E.Var):
+            ctes.append(f"{nm[id(node)]}(i, j, v) as "
+                        f"(\n  {_cte_sql(node, nm, dialect)}\n)")
+    return ctes, nm, has_scan
+
+
 def render_ctes(roots: list[E.Expr], dialect=None
                 ) -> tuple[list[str], dict[int, str]]:
     """One CTE string per non-leaf node, topologically ordered, plus the
     id→name map used to reference any node (Vars map to their table name;
     auto-named nodes get deterministic names — :func:`assign_names`)."""
-    dialect = _get_dialect(dialect)
-    order = E.topo_order(*roots)
-    nm = assign_names(order)
-    ctes: list[str] = []
-    for node in order:
-        if not isinstance(node, E.Var):
-            ctes.append(f"{nm[id(node)]}(i, j, v) as "
-                        f"(\n  {_cte_sql(node, nm, dialect)}\n)")
+    ctes, nm, _ = _render_ctes(roots, _get_dialect(dialect))
     return ctes, nm
 
 
@@ -164,14 +249,15 @@ def to_sql92(roots: list[E.Expr], select=None, dialect=None) -> str:
     tails that reference auto-named roots — their CTE names are assigned at
     render time)."""
     dialect = _get_dialect(dialect)
-    ctes, nm = render_ctes(roots, dialect)
+    # has_scan: a Recurrence CTE references itself — WITH must say RECURSIVE
+    ctes, nm, has_scan = _render_ctes(roots, dialect)
     if callable(select):
         select = select(nm)
     tail = select or f"select * from {nm[id(roots[-1])]} order by i, j"
     if not ctes:  # every root is a stored table
         return f"{tail};"
     body = ",\n".join(ctes)
-    return f"{_with_keyword(dialect)} {body}\n{tail};"
+    return f"{_with_keyword(dialect, recursive=has_scan)} {body}\n{tail};"
 
 
 def multi_root_select(roots: list[E.Expr]):

@@ -12,6 +12,9 @@
 * :mod:`~repro.db.train` — Listing 7/10 training + Listing 8 inference
   executed inside the database.
 
+* :mod:`~repro.db.zoo` — the DAG zoo in SQL: MoE dispatch/combine and the
+  RWKV recurrences transpiled to executable queries (§8 outlook).
+
 Submodules that depend on :mod:`repro.core` are loaded lazily so that
 ``core`` ↔ ``db`` imports cannot cycle.
 """
@@ -23,6 +26,7 @@ from .dialect import (ARRAY_UDFS, HAVE_DUCKDB, DuckDBDialect, Sql92Dialect,
 
 __all__ = [
     "adapter", "dialect", "relation_io", "plan_cache", "sql_engine", "train",
+    "zoo",
     "Adapter", "SQLiteAdapter", "DuckDBAdapter", "connect",
     "Sql92Dialect", "SqliteDialect", "DuckDBDialect", "get_dialect",
     "ARRAY_UDFS", "HAVE_DUCKDB", "matrix_to_json", "json_to_matrix",
@@ -33,6 +37,7 @@ _LAZY = {
     "plan_cache": ("repro.db.plan_cache", None),
     "sql_engine": ("repro.db.sql_engine", None),
     "train": ("repro.db.train", None),
+    "zoo": ("repro.db.zoo", None),
     "SQLEngine": ("repro.db.sql_engine", "SQLEngine"),
     "PlanCache": ("repro.db.plan_cache", "PlanCache"),
     "train_in_db": ("repro.db.train", "train_in_db"),

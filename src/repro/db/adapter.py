@@ -51,6 +51,9 @@ class Adapter:
 
     dialect: Sql92Dialect
     placeholder = "?"
+    #: whether ``insert_matrix_json`` (engine-side json_each expansion) is
+    #: available — probed per connection where the backend supports it
+    supports_json_ingest = False
 
     def __init__(self, conn):
         self.conn = conn
@@ -155,6 +158,51 @@ class SQLiteAdapter(Adapter):
 
     def __init__(self, path: str = ":memory:"):
         super().__init__(sqlite3.connect(path))
+        try:  # table-valued JSON ingestion needs the (default) JSON1 ext.
+            self.conn.execute("select count(*) from json_each('[0]')")
+            self.supports_json_ingest = True
+        except sqlite3.Error:  # pragma: no cover - JSON1-less builds
+            self.supports_json_ingest = False
+
+    #: cells per bound JSON array.  sqlite ≤3.37 extracts json_each values
+    #: in O(array length) per row — one giant array is quadratic; bounded
+    #: chunks keep the parse cost linear (and the win grows on ≥3.38
+    #: builds, whose JSON table-functions are linear outright).
+    JSON_CHUNK_CELLS = 4096
+
+    def insert_matrix_json(self, name: str, x: np.ndarray) -> None:
+        """JSON-array ingestion (the ROADMAP's table-valued lever): bind
+        row-major JSON array chunks and let the engine expand them with the
+        ``json_each`` table-valued function — index arithmetic on ``key``
+        recovers the 1-based (i, j) pivot *inside* sqlite, eliminating the
+        per-row Python binding of the VALUES path.  Values round-trip
+        through sqlite's text→real parse, which may differ by ~1 ulp from
+        the bound double (``bench_mnist_db.py`` reports the two paths side
+        by side; on this container's 3.34 the engine-side parse roughly
+        cancels the client-side saving — the lever pays off on newer
+        JSON-optimised builds)."""
+        import json
+
+        _check_ident(name)
+        self.matrix_digests.pop(name, None)
+        a = np.asarray(x, dtype=np.float64)
+        if a.ndim != 2:
+            raise ValueError(f"expected a matrix, got shape {a.shape}")
+        if not np.isfinite(a).all():
+            # json.dumps would emit NaN/Infinity tokens, which sqlite's
+            # JSON parser rejects mid-chunk (partial table); refuse up
+            # front — the VALUES path (write_matrix) binds them fine
+            raise ValueError("non-finite values cannot ride the JSON "
+                             "ingestion path; use write_matrix")
+        cols = a.shape[1]
+        flat = a.reshape(-1)
+        chunk = max(cols, (self.JSON_CHUNK_CELLS // cols) * cols)
+        sql = (f"insert into {name} "
+               f"select (key + ?) / {cols} + 1, key % {cols} + 1, value "
+               f"from json_each(?)")
+        cur = self.conn.cursor()
+        for s in range(0, flat.size, chunk):
+            cur.execute(sql, (s, json.dumps(flat[s:s + chunk].tolist())))
 
     def insert_columns(self, name: str,
                        cols: Sequence[np.ndarray]) -> None:

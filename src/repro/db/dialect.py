@@ -129,6 +129,23 @@ class Sql92Dialect:
                 f"  from {self.series_from(rows, 'a', 'i')},\n"
                 f"       {self.series_from(cols, 'b', 'j')}")
 
+    def frame_from(self, rows: int, cols: int) -> str:
+        """A from-clause term yielding the full (i, j) index frame — the
+        outer-join skeleton that keeps Scatter/RowShift outputs dense.
+        Explicit CROSS JOIN so a following LEFT JOIN's ON clause may
+        reference both series (comma precedence differs across engines)."""
+        return (f"{self.series_from(rows, 'a', 'i')} cross join\n"
+                f"       {self.series_from(cols, 'b', 'j')}")
+
+    def topk_mask_select(self, src: str, k: int) -> str:
+        """The ArgTopK indicator: 1 where the cell ranks in its row's top
+        ``k`` by value (ties toward the smaller j).  Strict SQL-92 has no
+        window functions, so the rank is a correlated count — engines with
+        windows override with ``row_number()``."""
+        return (f"select m.i, m.j, case when (select count(*) from {src} n"
+                f" where n.i = m.i and (n.v > m.v or (n.v = m.v and n.j < m.j))"
+                f") < {k} then 1.0 else 0.0 end as v\n  from {src} as m")
+
     # -- connection preparation --------------------------------------------
     def prepare(self, conn) -> None:
         """Install anything the rendered SQL assumes (UDFs etc.)."""
@@ -137,6 +154,16 @@ class Sql92Dialect:
     #: can the engine run Listing 7 verbatim (recursive table in a nested
     #: WITH inside the recursive select)?
     supports_listing7 = True
+
+
+def _windowed_topk_mask(src: str, k: int) -> str:
+    """row_number() rendering of the ArgTopK indicator (sqlite ≥3.25 and
+    duckdb both have window functions; the rank order matches the SQL-92
+    correlated count and ``dense.topk_mask`` exactly)."""
+    return (f"select q.i, q.j, case when q.rnk <= {k} then 1.0 else 0.0 end"
+            f" as v\n  from (select i, j, v, row_number() over"
+            f" (partition by i order by v desc, j asc) as rnk"
+            f" from {src}) q")
 
 
 class SqliteDialect(Sql92Dialect):
@@ -149,6 +176,9 @@ class SqliteDialect(Sql92Dialect):
                 f" (select 1 union all select x+1 from s where x < {n})"
                 f" select x as {col} from s) {alias}")
 
+    def topk_mask_select(self, src: str, k: int) -> str:
+        return _windowed_topk_mask(src, k)
+
     def prepare(self, conn) -> None:
         conn.create_function("exp", 1, math.exp, deterministic=True)
         conn.create_function("greatest", 2, max, deterministic=True)
@@ -158,6 +188,9 @@ class SqliteDialect(Sql92Dialect):
 
 class DuckDBDialect(Sql92Dialect):
     name = "duckdb"
+
+    def topk_mask_select(self, src: str, k: int) -> str:
+        return _windowed_topk_mask(src, k)
 
     def prepare(self, conn) -> None:
         # generate_series / exp / greatest are native; the array UDFs back

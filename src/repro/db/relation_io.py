@@ -110,9 +110,23 @@ def rows_to_reltensor(rows, shape: tuple[int, int]) -> RelTensor:
 
 def write_matrix(adapter: Adapter, name: str, x) -> None:
     """CREATE + bulk-ingest the relation for ``x`` (replacing any old one).
-    The fast path: vectorized pivot + the adapter's column ingestion."""
+    The fast path: vectorized pivot + the adapter's column ingestion.
+    (The table-valued JSON alternative, :func:`write_matrix_json`, moves
+    the pivot into the engine; ``bench_mnist_db.py`` races the two — it
+    only wins on JSON-optimised sqlite builds, so it is opt-in.)"""
     adapter.create_table(name, MATRIX_COLUMNS)
     adapter.insert_columns(name, matrix_to_columns(x))
+
+
+def write_matrix_json(adapter: Adapter, name: str, x) -> None:
+    """The JSON-array ingestion path (``SQLiteAdapter.insert_matrix_json``):
+    the (i, j, v) expansion happens inside the engine via ``json_each``.
+    Values may differ from the source by ~1 ulp (sqlite's text→real)."""
+    if not adapter.supports_json_ingest:
+        raise NotImplementedError(
+            f"{type(adapter).__name__} has no table-valued JSON ingestion")
+    adapter.create_table(name, MATRIX_COLUMNS)
+    adapter.insert_matrix_json(name, x)
 
 
 def write_matrix_percell(adapter: Adapter, name: str, x) -> None:

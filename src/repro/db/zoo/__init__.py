@@ -1,0 +1,31 @@
+"""The DAG zoo in SQL (paper §8 outlook).
+
+Transpilers from the marquee non-MLP kernels to executable SQL over the
+zoo IR tier (``core.expr``: RowReduce / Softmax / ArgTopK / Gather /
+Scatter / RowShift / Recurrence):
+
+* :mod:`~repro.db.zoo.moe_to_sql` — top-k gated MoE routing, dispatch and
+  combine (``kernels/moe_dispatch.py`` / ``nn/moe.py`` semantics);
+* :mod:`~repro.db.zoo.rwkv_to_sql` — the RWKV-6 time-mix recurrence as a
+  recursive CTE and the token-shift channel mix
+  (``kernels/rwkv6_scan.py`` semantics).
+
+Every graph is an ordinary expression DAG: Algorithm-1 autodiff, all
+three dialects, the plan cache and ``SQLEngine`` apply unchanged.
+"""
+from .moe_to_sql import (MoESQLConfig, init_moe_params, moe_combine_graph,
+                         moe_dispatch_graph, moe_env, moe_ffn_graph,
+                         moe_ffn_ref, router_graph, run_moe_in_db)
+from .rwkv_to_sql import (kron_index_relations, run_channel_mix_in_db,
+                          run_rwkv6_in_db, rwkv6_env, rwkv6_static_env,
+                          rwkv6_time_mix_graph, rwkv_channel_mix_graph,
+                          rwkv_channel_mix_ref)
+
+__all__ = [
+    "MoESQLConfig", "init_moe_params", "moe_ffn_graph", "moe_env",
+    "moe_ffn_ref", "moe_dispatch_graph", "moe_combine_graph",
+    "router_graph", "run_moe_in_db",
+    "kron_index_relations", "rwkv6_time_mix_graph", "rwkv6_env",
+    "rwkv6_static_env", "run_rwkv6_in_db", "rwkv_channel_mix_graph",
+    "rwkv_channel_mix_ref", "run_channel_mix_in_db",
+]

@@ -1,0 +1,195 @@
+"""Mixture-of-Experts routing, dispatch and combine transpiled to SQL.
+
+The router's output *is* the paper's relation ``{[i, j, v]}`` (token i →
+expert j with gate v, see ``nn/moe.py``); this module expresses the whole
+layer over the zoo IR so ``core.sqlgen`` renders it as one WITH query and
+``SQLEngine`` runs it inside sqlite/duckdb:
+
+* **routing** — ``Softmax`` over the router logits, ``ArgTopK`` for the
+  top-k indicator (a window rank / correlated count in SQL), and the gate
+  renormalisation ``(mask ∘ probs) / Σ_row`` via ``RowReduce`` + ``recip``.
+  The DeepSeek "pre" (softmax → top-k → renormalise) and DBRX/Mixtral
+  "post" (top-k → softmax over the selected logits) conventions produce
+  the *same* renormalised masked probabilities — exp-ratio identity — so
+  one graph serves both of ``nn/moe.py``'s router modes.
+* **dispatch / combine** — two formulations:
+  ``moe_dispatch_graph`` / ``moe_combine_graph`` mirror the Pallas kernels
+  (``kernels/moe_dispatch.py``: gather each slot's token row and scale by
+  its gate — the join's select clause; ``kernels/ref.moe_combine``: group
+  by destination token and sum) over an explicit slot→token index
+  relation; ``moe_ffn_graph`` is the fully-in-DB layer, contracting the
+  gating matrix against per-expert SwiGLU outputs (the paper's §5 array
+  representation of the same relation — no data-dependent structure, so
+  the plan caches across batches).
+
+Capacity dropping (a load-balancing concern, not layer semantics) is not
+modelled: differential tests pick configs where nothing overflows, where
+``nn/moe.py``'s two impls and this SQL agree exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ...core import expr as E
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESQLConfig:
+    n_tokens: int
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEGraph:
+    cfg: MoESQLConfig
+    x: E.Var
+    out: E.Expr          # (T, d) combined expert output
+    gates: E.Expr        # (T, E) renormalised gate matrix
+    probs: E.Expr        # (T, E) router softmax
+    weight_vars: tuple   # every weight Var, for value_and_grad_fn
+
+
+def _silu(z: E.Expr) -> E.Expr:
+    """silu(z) = z ∘ sig(z) — composed, no new MapFn needed."""
+    return E.hadamard(z, E.sigmoid(z))
+
+
+def router_graph(x: E.Expr, w_router: E.Expr, top_k: int
+                 ) -> tuple[E.Expr, E.Expr, E.Expr]:
+    """logits → (probs, topk mask, renormalised gates), all (T, E)."""
+    e = w_router.shape[1]
+    logits = E.matmul(x, w_router, name="router_logits")
+    probs = E.softmax(logits, name="router_probs")
+    mask = E.argtopk(probs, top_k, name="topk_mask")
+    g = E.hadamard(mask, probs, name="gates_raw")
+    norm = E.row_reduce(g, "sum", axis=1, name="gate_norm")
+    gates = E.hadamard(
+        g, E.matmul(E.recip(norm), E.const(1.0, (1, e))), name="gates")
+    return probs, mask, gates
+
+
+def moe_ffn_graph(cfg: MoESQLConfig) -> MoEGraph:
+    """The full layer: route, per-expert SwiGLU, gate-weighted combine.
+
+    Per-expert outputs are selected with the unit-basis index relations
+    ``sel_e`` (Listing-5 one-hot columns, supplied by :func:`moe_env`):
+    column e of the gate matrix is ``gates · sel_e`` — a join against an
+    index relation, not a host-side slice."""
+    t, d, e, f = cfg.n_tokens, cfg.d_model, cfg.n_experts, cfg.d_ff
+    x = E.var("x", (t, d))
+    w_router = E.var("w_router", (d, e))
+    probs, _mask, gates = router_graph(x, w_router, cfg.top_k)
+    weight_vars = [w_router]
+    out = None
+    for k in range(e):
+        wi = E.var(f"wi_{k}", (d, f))
+        wg = E.var(f"wg_{k}", (d, f))
+        wo = E.var(f"wo_{k}", (f, d))
+        weight_vars += [wi, wg, wo]
+        y = E.matmul(E.hadamard(E.matmul(x, wi), _silu(E.matmul(x, wg))),
+                     wo)
+        col = E.matmul(gates, E.var(f"sel_{k}", (e, 1)))       # (T, 1)
+        w = E.hadamard(E.matmul(col, E.const(1.0, (1, d))), y)
+        out = w if out is None else E.add(out, w)
+    return MoEGraph(cfg=cfg, x=x, out=out, gates=gates, probs=probs,
+                    weight_vars=tuple(weight_vars))
+
+
+def moe_dispatch_graph(n_tokens: int, d_model: int, n_slots: int
+                       ) -> tuple[E.Expr, E.Var, E.Var, E.Var]:
+    """``kernels/moe_dispatch`` as IR: out[s, :] = gate[s] · x[tok[s], :].
+
+    ``slot_token`` is the (S, 1) index relation of 0-based token rows (the
+    expert-sorted ``sort_idx``), ``slot_gate`` the (S, 1) gate values.
+    Returns (out, x, slot_token, slot_gate)."""
+    x = E.var("x", (n_tokens, d_model))
+    tok = E.var("slot_token", (n_slots, 1))
+    gate = E.var("slot_gate", (n_slots, 1))
+    out = E.hadamard(E.gather(x, tok),
+                     E.matmul(gate, E.const(1.0, (1, d_model))),
+                     name="dispatch")
+    return out, x, tok, gate
+
+
+def moe_combine_graph(n_slots: int, d_model: int, n_tokens: int
+                      ) -> tuple[E.Expr, E.Var, E.Var]:
+    """``kernels/ref.moe_combine`` as IR: group the slot relation by
+    destination token, sum — one Scatter node.  Returns (out, y, tok)."""
+    y = E.var("expert_out", (n_slots, d_model))
+    tok = E.var("slot_token", (n_slots, 1))
+    out = E.scatter(y, tok, n_tokens, name="combine")
+    return out, y, tok
+
+
+# ---------------------------------------------------------------------------
+# parameters / env
+# ---------------------------------------------------------------------------
+
+def init_moe_params(cfg: MoESQLConfig, seed: int = 0) -> dict[str, np.ndarray]:
+    """Small random weights in the ``nn/moe.py`` layout: stacked
+    (E, d, f) expert tensors plus the (d, E) router."""
+    rng = np.random.RandomState(seed)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+
+    def w(*shape):
+        return (rng.randn(*shape) / np.sqrt(shape[0])).astype(np.float32)
+
+    return {"router": w(d, e), "wi": w(e, d, f), "wg": w(e, d, f),
+            "wo": w(e, f, d)}
+
+
+def moe_env(cfg: MoESQLConfig, params: dict, x: np.ndarray) -> dict:
+    """Leaf tables for :func:`moe_ffn_graph`: data, weights and the E
+    unit-basis selector relations."""
+    e = cfg.n_experts
+    env = {"x": np.asarray(x), "w_router": np.asarray(params["router"])}
+    eye = np.eye(e, dtype=np.float64)
+    for k in range(e):
+        env[f"wi_{k}"] = np.asarray(params["wi"][k])
+        env[f"wg_{k}"] = np.asarray(params["wg"][k])
+        env[f"wo_{k}"] = np.asarray(params["wo"][k])
+        env[f"sel_{k}"] = eye[:, k:k + 1]
+    return env
+
+
+def moe_ffn_ref(cfg: MoESQLConfig, params: dict, x) -> np.ndarray:
+    """jnp oracle with the exact graph semantics (softmax → top-k mask →
+    renormalise → gate-weighted SwiGLU sum, no capacity) — the timing
+    baseline of ``benchmarks/bench_zoo_db.py``.  The differential tests
+    additionally pin it against ``nn/moe.py`` + ``kernels/ref.py``."""
+    import jax.numpy as jnp
+    from ...core import dense
+
+    x = jnp.asarray(x)
+    logits = x @ jnp.asarray(params["router"])
+    probs = jnp.exp(logits - logits.max(1, keepdims=True))
+    probs = probs / probs.sum(1, keepdims=True)
+    mask = dense.topk_mask(probs, cfg.top_k)
+    g = mask * probs
+    gates = g / g.sum(1, keepdims=True)
+    h = jnp.einsum("td,edf->tef", x, jnp.asarray(params["wi"]))
+    gt = jnp.einsum("td,edf->tef", x, jnp.asarray(params["wg"]))
+    ys = jnp.einsum("tef,efd->ted", h * (gt * (1 / (1 + jnp.exp(-gt)))),
+                    jnp.asarray(params["wo"]))
+    return np.asarray(jnp.einsum("te,ted->td", gates, ys))
+
+
+def run_moe_in_db(cfg: MoESQLConfig, params: dict, x, *,
+                  backend: str = "sqlite", engine=None) -> np.ndarray:
+    """Evaluate the full MoE layer inside the database; returns (T, d)."""
+    from ..sql_engine import SQLEngine
+
+    graph = moe_ffn_graph(cfg)
+    env = moe_env(cfg, params, x)
+    eng = engine if engine is not None else SQLEngine(backend=backend)
+    try:
+        out, = eng.evaluate([graph.out], env)
+        return out
+    finally:
+        if engine is None:
+            eng.close()

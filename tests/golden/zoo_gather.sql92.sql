@@ -1,0 +1,5 @@
+with gath_c0(i, j, v) as (
+  select g.i, m.j, m.v
+  from zidx as g inner join zx as m on m.i = cast(g.v as integer) + 1
+)
+select 0 as r, i, j, v from gath_c0;

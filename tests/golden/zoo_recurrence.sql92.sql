@@ -1,0 +1,18 @@
+with recursive rec_c0(i, j, v) as (
+  select m.i, m.j, m.v from zb as m where m.i = 1
+  union all
+  select r.i + 1, r.j, am.v * r.v + bm.v
+    from rec_c0 as r
+    inner join za as am on am.i = r.i + 1 and am.j = r.j
+    inner join zb as bm on bm.i = r.i + 1 and bm.j = r.j
+),
+rec_c1(i, j, v) as (
+  select m.i, m.j, m.v from zb as m where m.i = 4
+  union all
+  select r.i - 1, r.j, am.v * r.v + bm.v
+    from rec_c1 as r
+    inner join za as am on am.i = r.i - 1 and am.j = r.j
+    inner join zb as bm on bm.i = r.i - 1 and bm.j = r.j
+)
+select 0 as r, i, j, v from rec_c0
+union all select 1 as r, i, j, v from rec_c1;

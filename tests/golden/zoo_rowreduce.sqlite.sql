@@ -1,0 +1,10 @@
+with recursive rsum_c0(i, j, v) as (
+  select i, 1 as j, sum(v) as v from zx
+  group by i
+),
+rmax_c1(i, j, v) as (
+  select 1 as i, j, max(v) as v from zx
+  group by j
+)
+select 0 as r, i, j, v from rsum_c0
+union all select 1 as r, i, j, v from rmax_c1;

@@ -1,0 +1,14 @@
+with shift_c0(i, j, v) as (
+  select a.i, b.j, coalesce(m.v, 0.0) as v
+  from (select generate_series as i from generate_series(1,4)) a cross join
+       (select generate_series as j from generate_series(1,3)) b
+  left join zx as m on m.i = a.i - (1) and m.j = b.j
+),
+shift_c1(i, j, v) as (
+  select a.i, b.j, coalesce(m.v, 0.0) as v
+  from (select generate_series as i from generate_series(1,4)) a cross join
+       (select generate_series as j from generate_series(1,3)) b
+  left join zx as m on m.i = a.i - (-1) and m.j = b.j
+)
+select 0 as r, i, j, v from shift_c0
+union all select 1 as r, i, j, v from shift_c1;

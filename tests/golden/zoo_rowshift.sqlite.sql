@@ -1,0 +1,14 @@
+with recursive shift_c0(i, j, v) as (
+  select a.i, b.j, coalesce(m.v, 0.0) as v
+  from (with recursive s(x) as (select 1 union all select x+1 from s where x < 4) select x as i from s) a cross join
+       (with recursive s(x) as (select 1 union all select x+1 from s where x < 3) select x as j from s) b
+  left join zx as m on m.i = a.i - (1) and m.j = b.j
+),
+shift_c1(i, j, v) as (
+  select a.i, b.j, coalesce(m.v, 0.0) as v
+  from (with recursive s(x) as (select 1 union all select x+1 from s where x < 4) select x as i from s) a cross join
+       (with recursive s(x) as (select 1 union all select x+1 from s where x < 3) select x as j from s) b
+  left join zx as m on m.i = a.i - (-1) and m.j = b.j
+)
+select 0 as r, i, j, v from shift_c0
+union all select 1 as r, i, j, v from shift_c1;

@@ -1,0 +1,11 @@
+with scat_c0(i, j, v) as (
+  select a.i, b.j, coalesce(acc.v, 0.0) as v
+  from (select generate_series as i from generate_series(1,5)) a cross join
+       (select generate_series as j from generate_series(1,3)) b
+  left join (
+    select cast(g.v as integer) + 1 as i, m.j, sum(m.v) as v
+      from zidx as g inner join zx as m on m.i = g.i
+     group by cast(g.v as integer) + 1, m.j
+  ) acc on acc.i = a.i and acc.j = b.j
+)
+select 0 as r, i, j, v from scat_c0;

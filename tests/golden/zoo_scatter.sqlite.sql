@@ -1,0 +1,11 @@
+with recursive scat_c0(i, j, v) as (
+  select a.i, b.j, coalesce(acc.v, 0.0) as v
+  from (with recursive s(x) as (select 1 union all select x+1 from s where x < 5) select x as i from s) a cross join
+       (with recursive s(x) as (select 1 union all select x+1 from s where x < 3) select x as j from s) b
+  left join (
+    select cast(g.v as integer) + 1 as i, m.j, sum(m.v) as v
+      from zidx as g inner join zx as m on m.i = g.i
+     group by cast(g.v as integer) + 1, m.j
+  ) acc on acc.i = a.i and acc.j = b.j
+)
+select 0 as r, i, j, v from scat_c0;

@@ -1,0 +1,10 @@
+with smax_c0(i, j, v) as (
+  select m.i, m.j, exp(m.v - d.mx) / d.den as v
+  from zx as m inner join (
+    select e.i, e.mx, sum(exp(e2.v - e.mx)) as den
+      from (select i, max(v) as mx from zx group by i) e
+      inner join zx as e2 on e2.i = e.i
+     group by e.i, e.mx
+  ) d on m.i = d.i
+)
+select 0 as r, i, j, v from smax_c0;

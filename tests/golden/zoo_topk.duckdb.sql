@@ -1,0 +1,5 @@
+with topk_c0(i, j, v) as (
+  select q.i, q.j, case when q.rnk <= 2 then 1.0 else 0.0 end as v
+  from (select i, j, v, row_number() over (partition by i order by v desc, j asc) as rnk from zx) q
+)
+select 0 as r, i, j, v from topk_c0;

@@ -1,0 +1,5 @@
+with topk_c0(i, j, v) as (
+  select m.i, m.j, case when (select count(*) from zx n where n.i = m.i and (n.v > m.v or (n.v = m.v and n.j < m.j))) < 2 then 1.0 else 0.0 end as v
+  from zx as m
+)
+select 0 as r, i, j, v from topk_c0;

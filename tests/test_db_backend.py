@@ -110,6 +110,54 @@ class TestRelationIO:
         assert relation_io.rows_to_matrix([], (2, 3)).tolist() \
             == [[0.0] * 3] * 2
 
+    def test_json_ingestion_matches_values_path(self, monkeypatch):
+        """The json_each table-valued path (engine-side pivot) produces
+        the same relation as multi-row VALUES — chunk boundaries included
+        — up to sqlite's ~1-ulp text→real parse."""
+        from repro.db import adapter as adapter_mod
+        a = RNG.randn(7, 5)
+        with connect("sqlite") as ad:
+            if not ad.supports_json_ingest:  # pragma: no cover
+                pytest.skip("sqlite built without JSON1")
+            monkeypatch.setattr(adapter_mod.SQLiteAdapter,
+                                "JSON_CHUNK_CELLS", 10)  # several chunks
+            relation_io.write_matrix_json(ad, "mj", a)
+            relation_io.write_matrix(ad, "mv", a)
+            jrows = sorted(ad.execute("select i, j, v from mj"))
+            vrows = sorted(ad.execute("select i, j, v from mv"))
+            assert [(r[0], r[1]) for r in jrows] \
+                == [(r[0], r[1]) for r in vrows]
+            np.testing.assert_allclose([r[2] for r in jrows],
+                                       [r[2] for r in vrows], rtol=1e-12)
+            back = relation_io.read_matrix(ad, "mj", a.shape)
+            np.testing.assert_allclose(back, a, rtol=1e-12)
+
+    def test_json_ingestion_rejects_non_finite(self):
+        """NaN/inf would render as JSON tokens sqlite rejects mid-chunk —
+        refused up front so no partially-populated table is left behind."""
+        a = np.ones((2, 2))
+        a[0, 0] = np.nan
+        with connect("sqlite") as ad:
+            if not ad.supports_json_ingest:  # pragma: no cover
+                pytest.skip("sqlite built without JSON1")
+            with pytest.raises(ValueError, match="non-finite"):
+                relation_io.write_matrix_json(ad, "mj", a)
+            relation_io.write_matrix(ad, "mv", a)      # VALUES path binds it
+            assert np.isnan(relation_io.read_matrix(ad, "mv",
+                                                    a.shape)[0, 0])
+
+    def test_json_ingestion_row_not_multiple_of_chunk(self, monkeypatch):
+        from repro.db import adapter as adapter_mod
+        monkeypatch.setattr(adapter_mod.SQLiteAdapter,
+                            "JSON_CHUNK_CELLS", 3)  # < one row of 4 cells
+        a = RNG.randn(5, 4)
+        with connect("sqlite") as ad:
+            if not ad.supports_json_ingest:  # pragma: no cover
+                pytest.skip("sqlite built without JSON1")
+            relation_io.write_matrix_json(ad, "mj", a)
+            np.testing.assert_allclose(
+                relation_io.read_matrix(ad, "mj", a.shape), a, rtol=1e-12)
+
 
 # ---------------------------------------------------------------------------
 # dialects & adapters

@@ -79,6 +79,46 @@ class TestSignature:
         assert nm[id(a)] == "mm_c0"
         assert nm[id(m)] != "mm_c0" and nm[id(m)].startswith("mm_c")
 
+    def test_zoo_static_attributes_in_signature(self):
+        """Plan-cache staleness regression: a zoo op's static attributes
+        (k, reduce kind, axis, shift offset, scan direction) are part of
+        the rendered SQL, so DAGs differing only there must not share a
+        signature — or a cached plan."""
+        x = E.var("x", (4, 4))
+        idx = E.var("idx", (4, 1))
+        a, b = E.var("a", (4, 4)), E.var("b", (4, 4))
+        sig = lambda *roots: sqlgen.dag_signature(list(roots))
+        assert sig(E.argtopk(x, 2)) != sig(E.argtopk(x, 3))
+        assert sig(E.row_reduce(x, "sum")) != sig(E.row_reduce(x, "max"))
+        assert sig(E.row_reduce(x, "sum", 1)) != sig(E.row_reduce(x, "sum", 0))
+        assert sig(E.row_shift(x, 1)) != sig(E.row_shift(x, -1))
+        assert sig(E.recurrence(a, b)) != sig(E.recurrence(a, b,
+                                                           reverse=True))
+        # same-structure twins DO share (the cache hit still works)
+        assert sig(E.argtopk(x, 2)) == sig(E.argtopk(x, 2))
+        assert sig(E.gather(x, idx)) == sig(E.gather(x, idx))
+
+    def test_two_topk_dags_do_not_share_cached_plan(self, tmp_path):
+        """End to end: render k=2 through a cache, then ask for k=3 — the
+        cache must miss and the two plans must differ (before the
+        signature fix both DAGs hashed identically and k=3 silently
+        executed the k=2 plan)."""
+        from repro.db.sql_engine import SQLEngine
+
+        pc = PlanCache(path=str(tmp_path / "plans.db"))
+        d = SQLEngine(plan_cache_=False).dialect
+        x = E.var("x", (4, 4))
+        sql2 = pc.dag_sql([E.argtopk(x, 2)], d, tail="multi_root")
+        misses = pc.misses
+        sql3 = pc.dag_sql([E.argtopk(x, 3)], d, tail="multi_root")
+        assert pc.misses == misses + 1      # k=3 is a distinct plan
+        assert sql2 != sql3
+        np_x = np.arange(16, dtype=np.float64).reshape(4, 4)
+        eng2 = SQLEngine(plan_cache_=pc)
+        out2, = eng2.evaluate([E.argtopk(x, 2)], {"x": np_x})
+        out3, = eng2.evaluate([E.argtopk(x, 3)], {"x": np_x})
+        assert out2.sum() == 2 * 4 and out3.sum() == 3 * 4
+
 
 class TestPlanCacheStore:
     def test_memory_roundtrip_and_stats(self):

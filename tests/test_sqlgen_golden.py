@@ -82,6 +82,34 @@ CASES = {
 }
 
 
+# -- DAG-zoo tier: every new primitive, every dialect -----------------------
+
+def _zoo_leaves():
+    return (E.var("zx", (4, 3)), E.var("zidx", (4, 1)),
+            E.var("za", (4, 3)), E.var("zb", (4, 3)))
+
+
+def _zoo_roots(prim: str):
+    zx, zidx, za, zb = _zoo_leaves()
+    return {
+        "rowreduce": [E.row_reduce(zx, "sum", 1), E.row_reduce(zx, "max", 0)],
+        "softmax": [E.softmax(zx)],
+        "topk": [E.argtopk(zx, 2)],
+        "gather": [E.gather(zx, zidx)],
+        "scatter": [E.scatter(zx, zidx, 5)],
+        "rowshift": [E.row_shift(zx, 1), E.row_shift(zx, -1)],
+        "recurrence": [E.recurrence(za, zb),
+                       E.recurrence(za, zb, reverse=True)],
+    }[prim]
+
+
+for _prim in ("rowreduce", "softmax", "topk", "gather", "scatter",
+              "rowshift", "recurrence"):
+    for _dia in ("sql92", "sqlite", "duckdb"):
+        CASES[f"zoo_{_prim}.{_dia}"] = (
+            lambda p=_prim, d=_dia: multi(_zoo_roots(p), d))
+
+
 @pytest.mark.parametrize("name", sorted(CASES))
 def test_golden(name):
     rendered = CASES[name]()

@@ -1,0 +1,106 @@
+"""Property tests for the Gather/Scatter index-relation primitives.
+
+The algebra the autodiff rules rely on, over random shapes/indices:
+
+* permutation round-trip: scatter(gather(x, π), π) = x and
+  gather(scatter(y, π), π) = y for any permutation index relation π;
+* adjointness: ⟨gather(x, idx), y⟩ = ⟨x, scatter(y, idx)⟩ for *any*
+  index multiset (duplicates and gaps included) — Gather and Scatter are
+  exact transposes, which is why ``derive`` can swap them;
+* dense ≡ sqlite on the same random relations.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                                         "(pip install -e .[test])")
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+import jax.numpy as jnp
+
+from repro.core import dense
+from repro.core import expr as E
+from repro.db.sql_engine import SQLEngine
+
+finite = st.floats(-1e4, 1e4, allow_nan=False, allow_infinity=False,
+                   width=32)
+
+
+@st.composite
+def gather_case(draw):
+    """x (R, C) plus an arbitrary (S, 1) index relation into its rows."""
+    r = draw(st.integers(1, 6))
+    c = draw(st.integers(1, 5))
+    s = draw(st.integers(1, 8))
+    vals = draw(st.lists(finite, min_size=r * c, max_size=r * c))
+    idx = draw(st.lists(st.integers(0, r - 1), min_size=s, max_size=s))
+    x = np.asarray(vals, dtype=np.float32).reshape(r, c)
+    return x, np.asarray(idx, dtype=np.float64).reshape(s, 1)
+
+
+@st.composite
+def permutation_case(draw):
+    r = draw(st.integers(1, 6))
+    c = draw(st.integers(1, 5))
+    vals = draw(st.lists(finite, min_size=r * c, max_size=r * c))
+    perm = draw(st.permutations(list(range(r))))
+    x = np.asarray(vals, dtype=np.float32).reshape(r, c)
+    return x, np.asarray(perm, dtype=np.float64).reshape(r, 1)
+
+
+def ev(roots, env):
+    return [np.asarray(o) for o in dense.evaluate(
+        roots, {k: jnp.asarray(v) for k, v in env.items()})]
+
+
+@settings(max_examples=30, deadline=None)
+@given(permutation_case())
+def test_permutation_round_trips(case):
+    x, perm = case
+    r, c = x.shape
+    xv = E.var("x", (r, c))
+    iv = E.var("idx", (r, 1))
+    back, = ev([E.scatter(E.gather(xv, iv), iv, r)],
+               {"x": x, "idx": perm})
+    np.testing.assert_allclose(back, x, atol=1e-5)
+    fwd, = ev([E.gather(E.scatter(xv, iv, r), iv)],
+              {"x": x, "idx": perm})
+    want = np.zeros_like(x)
+    want[perm[:, 0].astype(int)] = x
+    got_scatter, = ev([E.scatter(xv, iv, r)], {"x": x, "idx": perm})
+    np.testing.assert_allclose(got_scatter, want, atol=1e-5)
+    np.testing.assert_allclose(fwd, x, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(gather_case(), st.integers(0, 2 ** 31 - 1))
+def test_gather_scatter_adjoint(case, seed):
+    x, idx = case
+    r, c = x.shape
+    s = idx.shape[0]
+    y = np.asarray(np.random.RandomState(seed).randn(s, c), np.float32)
+    xv = E.var("x", (r, c))
+    yv = E.var("y", (s, c))
+    iv = E.var("idx", (s, 1))
+    gx, sy = ev([E.gather(xv, iv), E.scatter(yv, iv, r)],
+                {"x": x, "y": y, "idx": idx})
+    lhs = float((gx * y).sum())
+    rhs = float((x * sy).sum())
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(gather_case())
+def test_sqlite_matches_dense(case):
+    x, idx = case
+    r, c = x.shape
+    s = idx.shape[0]
+    xv = E.var("x", (r, c))
+    iv = E.var("idx", (s, 1))
+    roots = [E.gather(xv, iv), E.scatter(E.gather(xv, iv), iv, r)]
+    want = ev(roots, {"x": x, "idx": idx})
+    with SQLEngine(plan_cache_=False) as eng:
+        got = eng.evaluate(roots, {"x": x, "idx": idx})
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=1e-4)

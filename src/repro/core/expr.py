@@ -182,6 +182,13 @@ class MapFn:
     df: Callable
     sql: Callable[[str], str]
 
+    @property
+    def udf(self) -> str:
+        """Name of the function in the UDF array extension
+        (``repro.db.dialect.ARRAY_UDFS``) — the array-dialect and
+        Listing-10 call renderings both spell ``f(X)`` as ``m<name>(x)``."""
+        return f"m{self.name}"
+
 
 RECIP = MapFn(
     name="recip",

@@ -20,6 +20,13 @@ recursive series) and map functions are spelled.  The default dialect is
 the paper's verbatim SQL-92, golden-tested in ``tests/test_sqlgen.py``;
 the ``sqlite`` / ``duckdb`` dialects make the output *executable* — see
 :mod:`repro.db.sql_engine` and :mod:`repro.db.train`.
+
+The ``array`` dialect is the fourth first-class target: the same entry
+point (:func:`to_sql`) renders every IR node — zoo tier included — as one
+single-row CTE over the UDF array extension instead of a cell relation,
+and ``Recurrence`` as a recursive CTE carrying one array-typed state row
+(:func:`to_sql_array_ctes`).  This is the paper's §5/§7 comparison axis:
+same DAG, same engine, two representations.
 """
 from __future__ import annotations
 
@@ -273,6 +280,36 @@ def multi_root_select(roots: list[E.Expr]):
     return tail
 
 
+def multi_root_select_array(roots: list[E.Expr]):
+    """The array-representation multi-root tail: one ``(r, m)`` row per
+    root, ``m`` the JSON array codec of the whole matrix."""
+    def tail(nm: dict[int, str]) -> str:
+        return "\nunion all ".join(
+            f"select {k} as r, m from {nm[id(r)]}"
+            for k, r in enumerate(roots))
+
+    return tail
+
+
+def multi_root_tail(roots: list[E.Expr], dialect=None):
+    """The multi-root union tail matching the dialect's representation."""
+    if _get_dialect(dialect).representation == "array":
+        return multi_root_select_array(roots)
+    return multi_root_select(roots)
+
+
+def to_sql(roots: list[E.Expr], select=None, dialect=None) -> str:
+    """The representation-dispatching entry point: relational dialects
+    render through :func:`to_sql92` (one cell-relation CTE per node), the
+    array dialect through :func:`to_sql_array_ctes` (one array-typed row
+    per node).  This is what :meth:`repro.db.plan_cache.PlanCache.dag_sql`
+    and ``SQLEngine`` call."""
+    dialect = _get_dialect(dialect)
+    if dialect.representation == "array":
+        return to_sql_array_ctes(roots, select=select)
+    return to_sql92(roots, select=select, dialect=dialect)
+
+
 def _training_step_parts(graph, lr: float, dialect,
                          iter_guard: str | None = None
                          ) -> tuple[list[str], str]:
@@ -456,6 +493,45 @@ def training_query_arrays(graph, n_iters: int, lr: float) -> str:
 # SQL + Arrays, function-call rendering (executable UDF array extension)
 # ---------------------------------------------------------------------------
 
+def _array_call(node: E.Expr, ref):
+    """The shared UDF-call spelling of the dense 2-D algebra + Map/MapDeriv
+    tier; ``ref(child)`` renders a child reference — the inline recursion
+    of :func:`array_call_expr` or the scalar subquery of the array-dialect
+    CTE rendering.  Returns ``None`` for node types outside this tier (the
+    zoo primitives and ``ReduceDeriv``, handled per renderer)."""
+    if isinstance(node, E.Const):
+        r, c = node.shape
+        return f"mconst({r},{c},{node.value})"
+    if isinstance(node, E.MatMul):
+        return f"mm({ref(node.x)}, {ref(node.y)})"
+    if isinstance(node, E.Hadamard):
+        return f"mhad({ref(node.x)}, {ref(node.y)})"
+    if isinstance(node, E.Add):
+        return f"madd({ref(node.x)}, {ref(node.y)})"
+    if isinstance(node, E.Sub):
+        return f"msub({ref(node.x)}, {ref(node.y)})"
+    if isinstance(node, E.Scale):
+        return f"mscale({node.c}, {ref(node.x)})"
+    if isinstance(node, E.Transpose):
+        return f"mt({ref(node.x)})"
+    if isinstance(node, MapDeriv):
+        if node.fn is E.SIGMOID:      # out·(1-out) from the cached output
+            return f"msigd({ref(node.fx)})"
+        if node.fn is E.SQUARE:
+            return f"msqrd({ref(node.x)})"
+        if node.fn is E.RELU:
+            return f"mrelud({ref(node.x)})"
+        if node.fn is E.RECIP:        # -1/x² = -out² from the cached output
+            return f"mrecipd({ref(node.fx)})"
+        if node.fn is E.ONE_MINUS:
+            r, c = node.shape
+            return f"mconst({r},{c},-1.0)"
+        raise NotImplementedError(node.fn.name)
+    if isinstance(node, E.Map):
+        return f"{node.fn.udf}({ref(node.x)})"
+    return None
+
+
 def array_call_expr(node: E.Expr, leaf) -> str:
     """Render a DAG as nested calls over the UDF array extension
     (:data:`repro.db.dialect.ARRAY_UDFS`).  ``leaf(name)`` maps a Var to a
@@ -465,38 +541,111 @@ def array_call_expr(node: E.Expr, leaf) -> str:
     price of sqlite's recursive-select restrictions, which forbid the
     derived-table levels Listing 10 uses for reuse.
     """
-    a = lambda n: array_call_expr(n, leaf)
     if isinstance(node, E.Var):
         return leaf(node.name)
-    if isinstance(node, E.Const):
-        r, c = node.shape
-        return f"mconst({r},{c},{node.value})"
-    if isinstance(node, E.MatMul):
-        return f"mm({a(node.x)}, {a(node.y)})"
-    if isinstance(node, E.Hadamard):
-        return f"mhad({a(node.x)}, {a(node.y)})"
-    if isinstance(node, E.Add):
-        return f"madd({a(node.x)}, {a(node.y)})"
-    if isinstance(node, E.Sub):
-        return f"msub({a(node.x)}, {a(node.y)})"
-    if isinstance(node, E.Scale):
-        return f"mscale({node.c}, {a(node.x)})"
-    if isinstance(node, E.Transpose):
-        return f"mt({a(node.x)})"
-    if isinstance(node, MapDeriv):
-        if node.fn is E.SIGMOID:      # out·(1-out) from the cached output
-            return f"msigd({a(node.fx)})"
-        if node.fn is E.SQUARE:
-            return f"msqrd({a(node.x)})"
-        if node.fn is E.RELU:
-            return f"mrelud({a(node.x)})"
-        if node.fn is E.ONE_MINUS:
-            r, c = node.shape
-            return f"mconst({r},{c},-1.0)"
-        raise NotImplementedError(node.fn.name)
-    if isinstance(node, E.Map):
-        return f"m{node.fn.name}({a(node.x)})"
+    sql = _array_call(node, lambda n: array_call_expr(n, leaf))
+    if sql is None:
+        raise TypeError(type(node))
+    return sql
+
+
+# ---------------------------------------------------------------------------
+# the array dialect: one CTE per node, each ONE array-typed row
+# ---------------------------------------------------------------------------
+
+def _array_cte_sql(node: E.Expr, nm: dict[int, str]) -> str:
+    """Render one node's matrix as a select-clause expression over the UDF
+    array extension — the array-dialect twin of :func:`_cte_sql`.  Children
+    are scalar subqueries against their CTEs (or leaf tables), so shared
+    subexpressions stay shared exactly as in the relational rendering.
+    The algebra/Map tier comes from the shared :func:`_array_call` table;
+    only the zoo primitives are spelled here."""
+    ref = lambda c: f"(select m from {nm[id(c)]})"
+    sql = _array_call(node, ref)
+    if sql is not None:
+        return sql
+    if isinstance(node, ReduceDeriv):
+        return f"mmaxind({ref(node.x)}, {ref(node.red)})"
+    if isinstance(node, E.RowReduce):
+        return f"mreduce({ref(node.x)}, '{node.kind}', {node.axis})"
+    if isinstance(node, E.Softmax):
+        return f"msoftmax({ref(node.x)})"
+    if isinstance(node, E.ArgTopK):
+        return f"mtopk({ref(node.x)}, {node.k})"
+    if isinstance(node, E.Gather):
+        return f"mgather({ref(node.x)}, {ref(node.idx)})"
+    if isinstance(node, E.Scatter):
+        return f"mscatter({ref(node.x)}, {ref(node.idx)}, {node.shape[0]})"
+    if isinstance(node, E.RowShift):
+        return f"mrowshift({ref(node.x)}, {node.offset})"
     raise TypeError(type(node))
+
+
+def _array_scan_ctes(node: E.Recurrence, nm: dict[int, str]) -> list[str]:
+    """The Recurrence as TWO array-dialect CTEs: a recursive scan whose
+    state is ONE array-typed row per step (``s_t`` as a (1, C) matrix — not
+    the relational recursion's C cells per step), and the reassembly of the
+    (T, C) trajectory via the ``magg_rows`` aggregate (order-independent,
+    so forward and reverse scans share it)."""
+    me = nm[id(node)]
+    a, b = (f"(select m from {nm[id(node.a)]})",
+            f"(select m from {nm[id(node.b)]})")
+    t_rows = node.shape[0]
+    anchor, nxt, guard = (1, "r.t + 1", f"r.t < {t_rows}") \
+        if not node.reverse else (t_rows, "r.t - 1", "r.t > 1")
+    step = f"madd(mhad(mrow({a}, {nxt}), r.s), mrow({b}, {nxt}))"
+    scan = (f"{me}_scan(t, s) as (\n"
+            f"  select {anchor}, mrow({b}, {anchor})\n"
+            f"  union all\n"
+            f"  select {nxt}, {step}\n"
+            f"    from {me}_scan as r\n"
+            f"   where {guard}\n)")
+    final = f"{me}(m) as (\n  select magg_rows(t, s) as m from {me}_scan\n)"
+    return [scan, final]
+
+
+def to_sql_array_ctes(roots: list[E.Expr], select=None) -> str:
+    """Emit the array-dialect WITH query: one single-row CTE per non-leaf
+    node, topologically ordered — Listing 10's named-expression reuse with
+    the executable UDF spelling.  ``select`` follows the :func:`to_sql92`
+    contract (string, or callable over the id→name map); the default tail
+    returns the last root's array value."""
+    order = E.topo_order(*roots)
+    nm = assign_names(order)
+    ctes: list[str] = []
+    has_scan = False
+    for node in order:
+        if isinstance(node, E.Var):
+            continue
+        if isinstance(node, E.Recurrence):
+            has_scan = True
+            ctes += _array_scan_ctes(node, nm)
+        else:
+            ctes.append(f"{nm[id(node)]}(m) as "
+                        f"(\n  select {_array_cte_sql(node, nm)} as m\n)")
+    if callable(select):
+        select = select(nm)
+    tail = select or f"select m from {nm[id(roots[-1])]}"
+    if not ctes:  # every root is a stored table
+        return f"{tail};"
+    body = ",\n".join(ctes)
+    return f"{'with recursive' if has_scan else 'with'} {body}\n{tail};"
+
+
+def training_query(graph, n_iters: int, lr: float, dialect=None) -> str:
+    """The fully-in-database training recursion for a dialect: Listing 7
+    verbatim where the engine can run it, the Listing-10 array recursion
+    for the array dialect.  (sqlite's relational representation has no
+    single-query recursion — use :func:`training_step_sql92` stepped.)"""
+    dialect = _get_dialect(dialect)
+    if dialect.representation == "array":
+        return training_query_array_calls(graph, n_iters, lr)
+    if dialect.supports_listing7:
+        return training_query_sql92(graph, n_iters, lr, dialect)
+    raise ValueError(
+        f"dialect {dialect.name!r} cannot run a single-query training "
+        f"recursion in the relational representation; use the stepped "
+        f"strategy (training_step_sql92) or the array representation")
 
 
 def training_query_array_calls(graph, n_iters: int, lr: float) -> str:

@@ -20,15 +20,16 @@ Submodules that depend on :mod:`repro.core` are loaded lazily so that
 """
 from . import adapter, dialect, relation_io
 from .adapter import Adapter, DuckDBAdapter, SQLiteAdapter, connect
-from .dialect import (ARRAY_UDFS, HAVE_DUCKDB, DuckDBDialect, Sql92Dialect,
-                      SqliteDialect, get_dialect, json_to_matrix,
-                      matrix_to_json)
+from .dialect import (ARRAY_UDFS, HAVE_DUCKDB, ArrayDialect, DuckDBDialect,
+                      Sql92Dialect, SqliteDialect, get_dialect,
+                      json_to_matrix, matrix_to_json)
 
 __all__ = [
     "adapter", "dialect", "relation_io", "plan_cache", "sql_engine", "train",
     "zoo",
     "Adapter", "SQLiteAdapter", "DuckDBAdapter", "connect",
-    "Sql92Dialect", "SqliteDialect", "DuckDBDialect", "get_dialect",
+    "Sql92Dialect", "SqliteDialect", "DuckDBDialect", "ArrayDialect",
+    "get_dialect",
     "ARRAY_UDFS", "HAVE_DUCKDB", "matrix_to_json", "json_to_matrix",
     "SQLEngine", "PlanCache", "train_in_db", "infer_in_db", "predict_in_db",
 ]

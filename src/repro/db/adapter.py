@@ -9,7 +9,12 @@ An adapter owns a connection plus the matching :mod:`repro.db.dialect`, and
 exposes exactly what the execution backend needs: ``execute`` (rows back),
 ``create_table``, ``bulk_insert`` and the vectorized ``insert_columns``.
 Everything else (SQL rendering, array pivoting) lives in ``dialect`` /
-``relation_io`` so the adapters stay thin.
+``relation_io`` so the adapters stay thin.  Both matrix representations
+ride the same methods: cell-relational ``{[i, j, v]}`` tables through
+``insert_columns``, array-representation tables (ONE row, a JSON
+array-typed ``m`` column — ``relation_io.ARRAY_COLUMNS``) through
+``bulk_insert``; ``matrix_digests`` entries embed the representation, so
+an engine switch on a shared connection always rewrites the leaf.
 
 Ingestion strategy per backend (the MNIST-scale bottleneck — see
 ``benchmarks/bench_mnist_db.py``):

@@ -35,6 +35,12 @@ actually ships):
     repro[db]``).  Stock SQL-92 rendering works unchanged (DuckDB has
     ``generate_series``, ``exp``, ``greatest``), and the Listing 7 / 10
     training queries are rendered by ``core.sqlgen`` verbatim.
+
+``ArrayDialect``
+    The paper's §5 *array data type* as a first-class fourth dialect
+    (``representation = "array"``): one row per matrix, UDF calls per IR
+    node, recursive-CTE scans over one array-typed state row.  See the
+    class docstring and ``core.sqlgen``'s array renderer.
 """
 from __future__ import annotations
 
@@ -78,6 +84,97 @@ def _wrap1(f):
     return lambda x: matrix_to_json(f(json_to_matrix(x)))
 
 
+# -- zoo-tier array semantics (numpy twins of core.dense.eval_node) ---------
+
+def _np_topk_mask(a: np.ndarray, k) -> np.ndarray:
+    """0/1 indicator of each row's k largest entries, ties toward the
+    smaller column index — the exact order of ``dense.topk_mask`` and the
+    relational ``order by v desc, j asc`` rank."""
+    c = a.shape[1]
+    gt = (a[:, None, :] > a[:, :, None]).sum(-1)
+    tri = np.tril(np.ones((c, c), dtype=bool), -1)
+    eq = ((a[:, None, :] == a[:, :, None]) & tri[None]).sum(-1)
+    return ((gt + eq) < int(k)).astype(np.float64)
+
+
+def _np_row_shift(a: np.ndarray, offset) -> np.ndarray:
+    offset = int(offset)
+    if offset == 0:
+        return a
+    out = np.zeros_like(a)
+    if abs(offset) >= a.shape[0]:
+        return out
+    if offset > 0:
+        out[offset:] = a[:-offset]
+    else:
+        out[:offset] = a[-offset:]
+    return out
+
+
+def _udf_mreduce(m: str, kind: str, axis) -> str:
+    a = json_to_matrix(m)
+    red = a.sum if kind == "sum" else a.max
+    return matrix_to_json(red(axis=int(axis), keepdims=True))
+
+
+def _udf_msoftmax(m: str) -> str:
+    a = json_to_matrix(m)
+    e = np.exp(a - a.max(axis=1, keepdims=True))
+    return matrix_to_json(e / e.sum(axis=1, keepdims=True))
+
+
+def _udf_mgather(x: str, idx: str) -> str:
+    a = json_to_matrix(x)
+    s = json_to_matrix(idx)[:, 0].astype(np.int64)
+    if s.size and (s.min() < 0 or s.max() >= a.shape[0]):
+        raise ValueError(f"mgather index out of range: valid rows "
+                         f"0..{a.shape[0] - 1}")
+    return matrix_to_json(a[s])
+
+
+def _udf_mscatter(x: str, idx: str, n_rows) -> str:
+    a = json_to_matrix(x)
+    s = json_to_matrix(idx)[:, 0].astype(np.int64)
+    n_rows = int(n_rows)
+    if s.size and (s.min() < 0 or s.max() >= n_rows):
+        # np.add.at would wrap negative indices silently — mirror mgather
+        # (and eager dense evaluation), which raise on the contract breach
+        raise ValueError(f"mscatter index out of range: valid rows "
+                         f"0..{n_rows - 1}")
+    out = np.zeros((n_rows, a.shape[1]))
+    np.add.at(out, s, a)
+    return matrix_to_json(out)
+
+
+def _udf_mrow(m: str, t) -> str:
+    """Row ``t`` (1-based) as a (1, C) matrix — the scan CTE's state row."""
+    t = int(t)
+    return matrix_to_json(json_to_matrix(m)[t - 1:t, :])
+
+
+def _udf_mmaxind(x: str, red: str) -> str:
+    """The argmax indicator of a cached keepdims max (``ReduceDeriv``):
+    broadcasting handles both axes."""
+    return matrix_to_json(
+        (json_to_matrix(x) == json_to_matrix(red)).astype(np.float64))
+
+
+class _MAggRows:
+    """Aggregate assembling scan-state rows back into one matrix: collects
+    (t, row) pairs, sorts by t, vstacks — order-independent, so both the
+    forward and the reverse recursion reassemble correctly."""
+
+    def __init__(self):
+        self.rows: list[tuple[int, str]] = []
+
+    def step(self, t, m):
+        self.rows.append((int(t), m))
+
+    def finalize(self) -> str:
+        return matrix_to_json(
+            np.vstack([json_to_matrix(m) for _t, m in sorted(self.rows)]))
+
+
 #: name → (nargs, python impl).  These are the matrix operations of the
 #: paper's §5 array extension; ``core.sqlgen.array_call_expr`` (and the
 #: ``training_query_array_calls`` recursion built on it) renders expression
@@ -99,6 +196,28 @@ ARRAY_UDFS: dict[str, tuple[int, object]] = {
     "mrelu": (1, _wrap1(lambda a: np.maximum(a, 0.0))),
     "mrelud": (1, _wrap1(lambda a: (a > 0.0).astype(np.float64))),
     "mone_minus": (1, _wrap1(lambda a: 1.0 - a)),
+    "mrecip": (1, _wrap1(lambda a: 1.0 / a)),
+    "mrecipd": (1, _wrap1(lambda a: -(a * a))),           # from cached f(x)
+    # zoo tier (PR 3 IR nodes) — the array-dialect lowering of RowReduce /
+    # Softmax / ArgTopK / Gather / Scatter / RowShift and the scan-state
+    # helpers of the Recurrence recursive CTE
+    "mreduce": (3, _udf_mreduce),
+    "msoftmax": (1, _udf_msoftmax),
+    "mtopk": (2, lambda m, k: matrix_to_json(_np_topk_mask(json_to_matrix(m),
+                                                           k))),
+    "mgather": (2, _udf_mgather),
+    "mscatter": (3, _udf_mscatter),
+    "mrowshift": (2, lambda m, off: matrix_to_json(
+        _np_row_shift(json_to_matrix(m), off))),
+    "mrow": (2, _udf_mrow),
+    "mmaxind": (2, _udf_mmaxind),
+}
+
+#: name → (nargs, aggregate class) — sqlite ``create_aggregate`` UDAFs
+#: (duckdb has no Python aggregate API; the array-dialect Recurrence
+#: lowering therefore needs a sqlite connection)
+ARRAY_AGGREGATES: dict[str, tuple[int, type]] = {
+    "magg_rows": (2, _MAggRows),
 }
 
 
@@ -106,10 +225,53 @@ ARRAY_UDFS: dict[str, tuple[int, object]] = {
 # dialects
 # ---------------------------------------------------------------------------
 
+def _register_sqlite_udfs(conn) -> None:
+    """The scalar builtins sqlite lacks + the whole UDF array extension
+    (scalars and aggregates) — shared by the sqlite and array dialects."""
+    conn.create_function("exp", 1, math.exp, deterministic=True)
+    conn.create_function("greatest", 2, max, deterministic=True)
+    for name, (nargs, fn) in ARRAY_UDFS.items():
+        conn.create_function(name, nargs, fn, deterministic=True)
+    for name, (nargs, cls) in ARRAY_AGGREGATES.items():
+        conn.create_aggregate(name, nargs, cls)
+
+
+def _register_duckdb_udfs(conn) -> None:  # pragma: no cover - needs duckdb
+    """Register the array extension on a duckdb connection.  duckdb's
+    ``create_function`` needs explicit types for lambdas; aggregates have
+    no Python API, so the Recurrence scan CTE stays sqlite-only."""
+    try:
+        from duckdb.typing import DOUBLE, VARCHAR
+        types = {"mscale": ([DOUBLE, VARCHAR], VARCHAR),
+                 "mconst": ([DOUBLE, DOUBLE, DOUBLE], VARCHAR),
+                 "mmean": ([VARCHAR], DOUBLE),
+                 "mreduce": ([VARCHAR, VARCHAR, DOUBLE], VARCHAR),
+                 "mtopk": ([VARCHAR, DOUBLE], VARCHAR),
+                 "mscatter": ([VARCHAR, VARCHAR, DOUBLE], VARCHAR),
+                 "mrowshift": ([VARCHAR, DOUBLE], VARCHAR),
+                 "mrow": ([VARCHAR, DOUBLE], VARCHAR)}
+    except ImportError:  # older duckdb
+        types = {}
+    for name, (nargs, fn) in ARRAY_UDFS.items():
+        params, ret = types.get(name, ([VARCHAR] * nargs, VARCHAR)) \
+            if types else (None, None)
+        try:
+            if params is not None:
+                conn.create_function(name, fn, params, ret)
+            else:
+                conn.create_function(name, fn)
+        except Exception:
+            continue  # register what we can; Listing 7 needs none
+
+
 class Sql92Dialect:
     """The paper's SQL-92 as written in the listings (golden dialect)."""
 
     name = "sql92"
+    #: which matrix representation the rendered SQL computes over:
+    #: ``"relational"`` — one ``{[i, j, v]}`` tuple per cell (Listing 4);
+    #: ``"array"`` — ONE row per matrix, an array-typed column (Listing 10)
+    representation = "relational"
     #: whether constant matrices need the RECURSIVE keyword on the WITH
     series_is_recursive = False
 
@@ -180,10 +342,7 @@ class SqliteDialect(Sql92Dialect):
         return _windowed_topk_mask(src, k)
 
     def prepare(self, conn) -> None:
-        conn.create_function("exp", 1, math.exp, deterministic=True)
-        conn.create_function("greatest", 2, max, deterministic=True)
-        for name, (nargs, fn) in ARRAY_UDFS.items():
-            conn.create_function(name, nargs, fn, deterministic=True)
+        _register_sqlite_udfs(conn)
 
 
 class DuckDBDialect(Sql92Dialect):
@@ -192,32 +351,43 @@ class DuckDBDialect(Sql92Dialect):
     def topk_mask_select(self, src: str, k: int) -> str:
         return _windowed_topk_mask(src, k)
 
-    def prepare(self, conn) -> None:
+    def prepare(self, conn) -> None:  # pragma: no cover - needs the extra
         # generate_series / exp / greatest are native; the array UDFs back
         # the same Listing-10 rendering as sqlite (stock DuckDB has list
         # types but no matrix operators — the paper used a patched build).
-        # DuckDB's create_function needs explicit types for lambdas.
-        try:  # pragma: no cover - needs the [db] extra
-            from duckdb.typing import DOUBLE, VARCHAR
-            types = {"mscale": ([DOUBLE, VARCHAR], VARCHAR),
-                     "mconst": ([DOUBLE, DOUBLE, DOUBLE], VARCHAR),
-                     "mmean": ([VARCHAR], DOUBLE)}
-        except ImportError:  # pragma: no cover - older duckdb
-            types = {}
-        for name, (nargs, fn) in ARRAY_UDFS.items():  # pragma: no cover
-            params, ret = types.get(name, ([VARCHAR] * nargs, VARCHAR)) \
-                if types else (None, None)
-            try:
-                if params is not None:
-                    conn.create_function(name, fn, params, ret)
-                else:
-                    conn.create_function(name, fn)
-            except Exception:
-                continue  # register what we can; Listing 7 needs none
+        _register_duckdb_udfs(conn)
+
+
+class ArrayDialect(Sql92Dialect):
+    """The array-typed representation as a first-class dialect (paper §5,
+    Listing 10): every matrix — leaf table, CTE, query result — is ONE row
+    whose single column ``m`` holds the JSON array codec, and every IR node
+    is a call into the UDF array extension instead of a join over cells.
+    ``Recurrence`` is the exception: it renders as a recursive CTE whose
+    state is one array-typed row per step (``mrow``/``magg_rows``), the
+    Listing-7 machinery at matrix granularity.
+
+    The dialect rides an existing *engine* connection (sqlite by default;
+    duckdb works for everything but Recurrence, whose reassembly aggregate
+    has no duckdb Python API) — pass ``SQLEngine(dialect="array")``.
+    """
+
+    name = "array"
+    representation = "array"
+    series_is_recursive = False   # constants are mconst() calls, no series
+    supports_listing7 = False     # training runs the Listing-10 recursion
+
+    def prepare(self, conn) -> None:
+        import sqlite3
+
+        if isinstance(conn, sqlite3.Connection):
+            _register_sqlite_udfs(conn)
+        else:  # pragma: no cover - needs duckdb
+            _register_duckdb_udfs(conn)
 
 
 _DIALECTS = {"sql92": Sql92Dialect, "sqlite": SqliteDialect,
-             "duckdb": DuckDBDialect}
+             "duckdb": DuckDBDialect, "array": ArrayDialect}
 
 
 def get_dialect(name) -> Sql92Dialect:

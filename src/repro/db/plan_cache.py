@@ -176,15 +176,18 @@ class PlanCache:
 
     def dag_sql(self, roots: list[E.Expr], dialect, tail: str = "last") -> str:
         """Rendered WITH query for ``roots``; ``tail`` ∈ {'last',
-        'multi_root'} selects the statement tail kind (part of the key)."""
+        'multi_root'} selects the statement tail kind (part of the key).
+        The dialect name keys the entry, so the same DAG under different
+        representations (``sqlite`` cell-relational vs ``array``) can
+        never share — or cross-serve — a cached plan."""
         if tail not in ("last", "multi_root"):
             raise ValueError(f"unknown tail kind {tail!r}")
         key = plan_key(roots, extra=(dialect.name, f"tail:{tail}"))
-        select = (sqlgen.multi_root_select(roots) if tail == "multi_root"
-                  else None)
+        select = (sqlgen.multi_root_tail(roots, dialect)
+                  if tail == "multi_root" else None)
         return self.rendered(
             key, dialect.name,
-            lambda: sqlgen.to_sql92(roots, select=select, dialect=dialect))
+            lambda: sqlgen.to_sql(roots, select=select, dialect=dialect))
 
 
 _default: PlanCache | None = None

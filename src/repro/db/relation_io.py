@@ -18,9 +18,14 @@ import numpy as np
 
 from ..core.relational import RelTensor
 from .adapter import Adapter, _check_ident
+from .dialect import json_to_matrix, matrix_to_json
 
 #: column layout of every matrix table, matching the paper's Fig. 1
 MATRIX_COLUMNS = (("i", "integer"), ("j", "integer"), ("v", "double precision"))
+
+#: column layout of an array-representation matrix table: the whole matrix
+#: is ONE row, column ``m`` holding the JSON array codec (paper §5)
+ARRAY_COLUMNS = (("m", "text"),)
 
 
 # ---------------------------------------------------------------------------
@@ -140,6 +145,19 @@ def read_matrix(adapter: Adapter, name: str,
                 shape: tuple[int, int]) -> np.ndarray:
     rows = adapter.execute(f"select i, j, v from {_check_ident(name)}")
     return rows_to_matrix(rows, shape)
+
+
+def write_matrix_array(adapter: Adapter, name: str, x) -> None:
+    """CREATE + ingest ``x`` in the *array* representation: one row, one
+    array-typed (JSON codec) column — the leaf layout the ``array`` dialect
+    renders against (``SQLEngine(dialect="array")``)."""
+    adapter.create_table(name, ARRAY_COLUMNS)
+    adapter.bulk_insert(name, [(matrix_to_json(x),)])
+
+
+def read_matrix_array(adapter: Adapter, name: str) -> np.ndarray:
+    rows = adapter.execute(f"select m from {_check_ident(name)}")
+    return json_to_matrix(rows[0][0])
 
 
 def write_reltensor(adapter: Adapter, name: str, rt: RelTensor) -> None:

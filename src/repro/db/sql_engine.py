@@ -32,6 +32,7 @@ from ..core import autodiff
 from ..core import expr as E
 from . import plan_cache, relation_io
 from .adapter import Adapter, connect
+from .dialect import get_dialect, json_to_matrix
 
 
 def _split_tagged(rows, roots: list[E.Expr]) -> list[np.ndarray]:
@@ -49,9 +50,14 @@ def _split_tagged(rows, roots: list[E.Expr]) -> list[np.ndarray]:
     return outs
 
 
-def _digest(x) -> bytes:
+def _digest(x, representation: str = "relational") -> bytes:
+    """Content digest of a leaf matrix.  The representation is folded in so
+    an adapter shared between a relational and an array engine can never
+    serve the unchanged-leaf skip across representations (the stored table
+    layouts are incompatible)."""
     a = np.ascontiguousarray(np.asarray(x, dtype=np.float64))
-    return hashlib.sha256(a.tobytes() + repr(a.shape).encode()).digest()
+    return hashlib.sha256(a.tobytes() + repr(a.shape).encode()
+                          + representation.encode()).digest()
 
 
 class SQLEngine:
@@ -60,12 +66,25 @@ class SQLEngine:
     kind = "sql"
 
     def __init__(self, backend: str = "sqlite", path: str = ":memory:",
-                 adapter: Adapter | None = None, plan_cache_=None):
+                 adapter: Adapter | None = None, plan_cache_=None,
+                 dialect=None):
         """``plan_cache_``: a :class:`repro.db.plan_cache.PlanCache`,
         ``None`` for the shared persistent default, or ``False`` to render
-        every query from scratch."""
+        every query from scratch.
+
+        ``dialect``: override the adapter's rendering dialect — pass
+        ``"array"`` for the array-typed representation (paper §5/§7: same
+        engine, one row per matrix, UDF calls per node) while the adapter
+        still supplies the connection.  ``None`` keeps the adapter's
+        native relational dialect."""
         self.adapter = adapter if adapter is not None else connect(backend, path)
-        self.dialect = self.adapter.dialect
+        if dialect is None:
+            self.dialect = self.adapter.dialect
+        else:
+            self.dialect = get_dialect(dialect)
+            if self.dialect is not self.adapter.dialect:
+                self.dialect.prepare(self.adapter.conn)
+        self.representation = self.dialect.representation
         self.plans = plan_cache.resolve(plan_cache_)
 
     # -- representation conversion (Engine-compatible no-ops) ---------------
@@ -84,13 +103,16 @@ class SQLEngine:
         (``matrix_digests``) and are invalidated by any ``create_table``
         on the same name, so direct writes (db.train) can't go stale."""
         stored = self.adapter.matrix_digests
+        write = (relation_io.write_matrix_array
+                 if self.representation == "array"
+                 else relation_io.write_matrix)
         for v in E.free_vars(*roots):
             if v.name not in env:
                 raise KeyError(f"env missing leaf table {v.name!r}")
-            d = _digest(env[v.name])
+            d = _digest(env[v.name], self.representation)
             if stored.get(v.name) == d:
                 continue
-            relation_io.write_matrix(self.adapter, v.name, env[v.name])
+            write(self.adapter, v.name, env[v.name])
             stored[v.name] = d
 
     def _render(self, roots: list[E.Expr]) -> str:
@@ -98,8 +120,20 @@ class SQLEngine:
         if self.plans is not None:
             return self.plans.dag_sql(roots, self.dialect, tail="multi_root")
         from ..core import sqlgen
-        return sqlgen.to_sql92(roots, select=sqlgen.multi_root_select(roots),
-                               dialect=self.dialect)
+        return sqlgen.to_sql(roots,
+                             select=sqlgen.multi_root_tail(roots, self.dialect),
+                             dialect=self.dialect)
+
+    def _decode(self, rows, roots: list[E.Expr]) -> list[np.ndarray]:
+        """Result rows → one dense matrix per root.  Relational: tagged
+        ``(r, i, j, v)`` cell tuples.  Array: one ``(r, m)`` row per root,
+        ``m`` the JSON array codec."""
+        if self.representation != "array":
+            return _split_tagged(rows, roots)
+        outs = [np.zeros(root.shape, dtype=np.float64) for root in roots]
+        for r, m in rows:
+            outs[int(r)] = json_to_matrix(m)
+        return outs
 
     def evaluate(self, roots: list[E.Expr], env: dict) -> list[np.ndarray]:
         """One round trip: write leaves, run ONE multi-root query, read back.
@@ -110,7 +144,7 @@ class SQLEngine:
         """
         self._write_env(roots, env)
         rows = self.adapter.execute(self._render(roots))
-        return _split_tagged(rows, roots)
+        return self._decode(rows, roots)
 
     def eval_fn(self, roots: list[E.Expr]) -> Callable:
         """Evaluator with the Engine.eval_fn contract (no jit — the
@@ -120,7 +154,7 @@ class SQLEngine:
 
         def fn(env: dict) -> list[np.ndarray]:
             self._write_env(roots, env)
-            return _split_tagged(self.adapter.execute(sql), roots)
+            return self._decode(self.adapter.execute(sql), roots)
 
         return fn
 

@@ -177,21 +177,42 @@ def train_in_db(graph, weights, x, y_onehot, n_iters: int, *,
                 backend: str = "sqlite", path: str = ":memory:",
                 adapter: Adapter | None = None,
                 strategy: str = "recursive",
+                representation: str = "auto",
                 plan_cache_=None) -> DBTrainResult:
     """Train the Section-2.2 MLP inside the database.  See module docstring
     for the strategy × backend matrix.  ``plan_cache_``: a
     :class:`~repro.db.plan_cache.PlanCache`, ``None`` for the shared
-    persistent default, or ``False`` to render the training SQL fresh."""
+    persistent default, or ``False`` to render the training SQL fresh.
+
+    ``representation`` picks the matrix encoding of the recursive
+    strategy: ``"array"`` forces the Listing-10 array recursion (one row
+    of array-typed weight columns — what ``SQLEngine(dialect="array")``
+    evaluates with), ``"relational"`` forces Listing 7 verbatim (set
+    semantics required — duckdb; sqlite falls back to ``stepped``), and
+    ``"auto"`` (default) picks whichever the engine can execute."""
+    if representation not in ("auto", "array", "relational"):
+        raise ValueError(f"unknown representation {representation!r}")
     adapter, owned = _open(backend, path, adapter)
     try:
         if strategy == "recursive":
+            if representation == "array" or (
+                    representation == "auto"
+                    and not adapter.dialect.supports_listing7):
+                return _train_recursive_arrays(
+                    graph, weights, x, y_onehot, n_iters, adapter,
+                    plan_cache_)
             if adapter.dialect.supports_listing7:
                 return _train_recursive_listing7(
                     graph, weights, x, y_onehot, n_iters, adapter,
                     plan_cache_)
-            return _train_recursive_arrays(
-                graph, weights, x, y_onehot, n_iters, adapter, plan_cache_)
+            # representation="relational" on an engine without Listing 7:
+            # the stepped execution is the same math, materialised per step
+            return _train_stepped(graph, weights, x, y_onehot, n_iters,
+                                  adapter, plan_cache_)
         if strategy == "stepped":
+            if representation == "array":
+                raise ValueError("the stepped strategy is relational-only "
+                                 "(INSERT…SELECT over the w cell relation)")
             return _train_stepped(graph, weights, x, y_onehot, n_iters,
                                   adapter, plan_cache_)
         raise ValueError(f"unknown strategy {strategy!r}")

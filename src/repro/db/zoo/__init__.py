@@ -14,8 +14,9 @@ Every graph is an ordinary expression DAG: Algorithm-1 autodiff, all
 three dialects, the plan cache and ``SQLEngine`` apply unchanged.
 """
 from .moe_to_sql import (MoESQLConfig, init_moe_params, moe_combine_graph,
-                         moe_dispatch_graph, moe_env, moe_ffn_graph,
-                         moe_ffn_ref, router_graph, run_moe_in_db)
+                         moe_dispatch_graph, moe_env, moe_env_batched,
+                         moe_ffn_graph, moe_ffn_graph_batched, moe_ffn_ref,
+                         router_graph, run_moe_in_db)
 from .rwkv_to_sql import (kron_index_relations, run_channel_mix_in_db,
                           run_rwkv6_in_db, rwkv6_env, rwkv6_static_env,
                           rwkv6_time_mix_graph, rwkv_channel_mix_graph,
@@ -23,6 +24,7 @@ from .rwkv_to_sql import (kron_index_relations, run_channel_mix_in_db,
 
 __all__ = [
     "MoESQLConfig", "init_moe_params", "moe_ffn_graph", "moe_env",
+    "moe_ffn_graph_batched", "moe_env_batched",
     "moe_ffn_ref", "moe_dispatch_graph", "moe_combine_graph",
     "router_graph", "run_moe_in_db",
     "kron_index_relations", "rwkv6_time_mix_graph", "rwkv6_env",

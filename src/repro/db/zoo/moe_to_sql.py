@@ -20,7 +20,11 @@ layer over the zoo IR so ``core.sqlgen`` renders it as one WITH query and
   relation; ``moe_ffn_graph`` is the fully-in-DB layer, contracting the
   gating matrix against per-expert SwiGLU outputs (the paper's §5 array
   representation of the same relation — no data-dependent structure, so
-  the plan caches across batches).
+  the plan caches across batches); ``moe_ffn_graph_batched`` replaces the
+  3·E per-expert weight tables with ONE expert-indexed relation per
+  parameter kind (expert folded into the row index, blocks selected by
+  Gather index relations) — same layer, batched storage, and it lowers
+  identically in the relational and array representations.
 
 Capacity dropping (a load-balancing concern, not layer semantics) is not
 modelled: differential tests pick configs where nothing overflows, where
@@ -100,6 +104,41 @@ def moe_ffn_graph(cfg: MoESQLConfig) -> MoEGraph:
                     weight_vars=tuple(weight_vars))
 
 
+def moe_ffn_graph_batched(cfg: MoESQLConfig) -> MoEGraph:
+    """The full layer over ONE expert-indexed weight relation per parameter
+    kind (the ROADMAP's batched per-expert contraction): ``wi_all`` /
+    ``wg_all`` are the (E·d, f) row-stack of every expert's matrix,
+    ``wo_all`` the (E·f, d) stack — the ``expert`` column of the paper-style
+    relation folded into the row index (expert = (i-1) // d).  Expert k's
+    block is selected with the stored index relation ``rows_d_k`` /
+    ``rows_f_k`` via ``Gather`` — a join, not a host-side slice — so
+    Algorithm 1 routes the per-expert gradients back into the stacked
+    relation through the adjoint ``Scatter``.  Works identically in the
+    relational and the array representation."""
+    t, d, e, f = cfg.n_tokens, cfg.d_model, cfg.n_experts, cfg.d_ff
+    x = E.var("x", (t, d))
+    w_router = E.var("w_router", (d, e))
+    probs, _mask, gates = router_graph(x, w_router, cfg.top_k)
+    wi_all = E.var("wi_all", (e * d, f))
+    wg_all = E.var("wg_all", (e * d, f))
+    wo_all = E.var("wo_all", (e * f, d))
+    weight_vars = [w_router, wi_all, wg_all, wo_all]
+    out = None
+    for k in range(e):
+        rows_d = E.var(f"rows_d_{k}", (d, 1))
+        rows_f = E.var(f"rows_f_{k}", (f, 1))
+        wi = E.gather(wi_all, rows_d, name=f"wi_b{k}")
+        wg = E.gather(wg_all, rows_d, name=f"wg_b{k}")
+        wo = E.gather(wo_all, rows_f, name=f"wo_b{k}")
+        y = E.matmul(E.hadamard(E.matmul(x, wi), _silu(E.matmul(x, wg))),
+                     wo)
+        col = E.matmul(gates, E.var(f"sel_{k}", (e, 1)))       # (T, 1)
+        w = E.hadamard(E.matmul(col, E.const(1.0, (1, d))), y)
+        out = w if out is None else E.add(out, w)
+    return MoEGraph(cfg=cfg, x=x, out=out, gates=gates, probs=probs,
+                    weight_vars=tuple(weight_vars))
+
+
 def moe_dispatch_graph(n_tokens: int, d_model: int, n_slots: int
                        ) -> tuple[E.Expr, E.Var, E.Var, E.Var]:
     """``kernels/moe_dispatch`` as IR: out[s, :] = gate[s] · x[tok[s], :].
@@ -157,6 +196,25 @@ def moe_env(cfg: MoESQLConfig, params: dict, x: np.ndarray) -> dict:
     return env
 
 
+def moe_env_batched(cfg: MoESQLConfig, params: dict, x: np.ndarray) -> dict:
+    """Leaf tables for :func:`moe_ffn_graph_batched`: the stacked
+    expert-indexed weight relations, the E unit-basis selectors and the E
+    block index relations (values = 0-based rows of expert k's block)."""
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+    env = {"x": np.asarray(x), "w_router": np.asarray(params["router"]),
+           "wi_all": np.asarray(params["wi"]).reshape(e * d, f),
+           "wg_all": np.asarray(params["wg"]).reshape(e * d, f),
+           "wo_all": np.asarray(params["wo"]).reshape(e * f, d)}
+    eye = np.eye(e, dtype=np.float64)
+    for k in range(e):
+        env[f"sel_{k}"] = eye[:, k:k + 1]
+        env[f"rows_d_{k}"] = np.arange(k * d, (k + 1) * d,
+                                       dtype=np.float64).reshape(-1, 1)
+        env[f"rows_f_{k}"] = np.arange(k * f, (k + 1) * f,
+                                       dtype=np.float64).reshape(-1, 1)
+    return env
+
+
 def moe_ffn_ref(cfg: MoESQLConfig, params: dict, x) -> np.ndarray:
     """jnp oracle with the exact graph semantics (softmax → top-k mask →
     renormalise → gate-weighted SwiGLU sum, no capacity) — the timing
@@ -180,12 +238,15 @@ def moe_ffn_ref(cfg: MoESQLConfig, params: dict, x) -> np.ndarray:
 
 
 def run_moe_in_db(cfg: MoESQLConfig, params: dict, x, *,
-                  backend: str = "sqlite", engine=None) -> np.ndarray:
-    """Evaluate the full MoE layer inside the database; returns (T, d)."""
+                  backend: str = "sqlite", engine=None,
+                  batched: bool = False) -> np.ndarray:
+    """Evaluate the full MoE layer inside the database; returns (T, d).
+    ``batched=True`` uses the expert-indexed stacked weight relations
+    (:func:`moe_ffn_graph_batched`) instead of E per-expert tables."""
     from ..sql_engine import SQLEngine
 
-    graph = moe_ffn_graph(cfg)
-    env = moe_env(cfg, params, x)
+    graph = moe_ffn_graph_batched(cfg) if batched else moe_ffn_graph(cfg)
+    env = (moe_env_batched if batched else moe_env)(cfg, params, x)
     eng = engine if engine is not None else SQLEngine(backend=backend)
     try:
         out, = eng.evaluate([graph.out], env)

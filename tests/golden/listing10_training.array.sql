@@ -1,0 +1,10 @@
+with recursive w (iter, w_xh, w_ho) as (
+  select 0, w_xh, w_ho from weights
+  union all
+  select w.iter + 1,
+         msub(w.w_xh, mscale(0.05, mm(mt(data.img), mhad(mm(mhad(mhad(mconst(4,2,1.0), msqrd(msub(msig(mm(msig(mm(data.img, w.w_xh)), w.w_ho)), data.one_hot))), msigd(msig(mm(msig(mm(data.img, w.w_xh)), w.w_ho)))), mt(w.w_ho)), msigd(msig(mm(data.img, w.w_xh))))))),
+         msub(w.w_ho, mscale(0.05, mm(mt(msig(mm(data.img, w.w_xh))), mhad(mhad(mconst(4,2,1.0), msqrd(msub(msig(mm(msig(mm(data.img, w.w_xh)), w.w_ho)), data.one_hot))), msigd(msig(mm(msig(mm(data.img, w.w_xh)), w.w_ho)))))))
+    from w, data
+   where w.iter < 10
+)
+select iter, w_xh, w_ho from w;

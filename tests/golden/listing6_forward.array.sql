@@ -1,0 +1,13 @@
+with z_xh(m) as (
+  select mm((select m from img), (select m from w_xh)) as m
+),
+a_xh(m) as (
+  select msig((select m from z_xh)) as m
+),
+z_ho(m) as (
+  select mm((select m from a_xh), (select m from w_ho)) as m
+),
+a_ho(m) as (
+  select msig((select m from z_ho)) as m
+)
+select m from a_ho;

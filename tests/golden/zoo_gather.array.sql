@@ -1,0 +1,4 @@
+with gath_c0(m) as (
+  select mgather((select m from zx), (select m from zidx)) as m
+)
+select 0 as r, m from gath_c0;

@@ -1,0 +1,22 @@
+with recursive rec_c0_scan(t, s) as (
+  select 1, mrow((select m from zb), 1)
+  union all
+  select r.t + 1, madd(mhad(mrow((select m from za), r.t + 1), r.s), mrow((select m from zb), r.t + 1))
+    from rec_c0_scan as r
+   where r.t < 4
+),
+rec_c0(m) as (
+  select magg_rows(t, s) as m from rec_c0_scan
+),
+rec_c1_scan(t, s) as (
+  select 4, mrow((select m from zb), 4)
+  union all
+  select r.t - 1, madd(mhad(mrow((select m from za), r.t - 1), r.s), mrow((select m from zb), r.t - 1))
+    from rec_c1_scan as r
+   where r.t > 1
+),
+rec_c1(m) as (
+  select magg_rows(t, s) as m from rec_c1_scan
+)
+select 0 as r, m from rec_c0
+union all select 1 as r, m from rec_c1;

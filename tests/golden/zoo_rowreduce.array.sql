@@ -1,0 +1,8 @@
+with rsum_c0(m) as (
+  select mreduce((select m from zx), 'sum', 1) as m
+),
+rmax_c1(m) as (
+  select mreduce((select m from zx), 'max', 0) as m
+)
+select 0 as r, m from rsum_c0
+union all select 1 as r, m from rmax_c1;

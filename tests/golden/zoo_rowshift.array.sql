@@ -1,0 +1,8 @@
+with shift_c0(m) as (
+  select mrowshift((select m from zx), 1) as m
+),
+shift_c1(m) as (
+  select mrowshift((select m from zx), -1) as m
+)
+select 0 as r, m from shift_c0
+union all select 1 as r, m from shift_c1;

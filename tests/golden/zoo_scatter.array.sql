@@ -1,0 +1,4 @@
+with scat_c0(m) as (
+  select mscatter((select m from zx), (select m from zidx), 5) as m
+)
+select 0 as r, m from scat_c0;

@@ -1,0 +1,4 @@
+with smax_c0(m) as (
+  select msoftmax((select m from zx)) as m
+)
+select 0 as r, m from smax_c0;

@@ -1,0 +1,4 @@
+with topk_c0(m) as (
+  select mtopk((select m from zx), 2) as m
+)
+select 0 as r, m from topk_c0;

@@ -119,6 +119,52 @@ class TestSignature:
         out3, = eng2.evaluate([E.argtopk(x, 3)], {"x": np_x})
         assert out2.sum() == 2 * 4 and out3.sum() == 3 * 4
 
+    def test_representation_keys_distinct_plans(self, tmp_path):
+        """Representation-staleness regression: the same DAG rendered under
+        the cell-relational ``sqlite`` dialect and the ``array`` dialect
+        must occupy distinct cache entries — a warm hit may never hand an
+        array-representation engine a relational plan (or vice versa)."""
+        from repro.db.dialect import get_dialect
+
+        pc = PlanCache(path=str(tmp_path / "plans.db"))
+        a, b = E.var("a", (3, 4)), E.var("b", (4, 2))
+        roots = [E.matmul(a, b)]
+        d_rel, d_arr = get_dialect("sqlite"), get_dialect("array")
+        sql_rel = pc.dag_sql(roots, d_rel, tail="multi_root")
+        misses = pc.misses
+        sql_arr = pc.dag_sql(roots, d_arr, tail="multi_root")
+        assert pc.misses == misses + 1          # distinct entry, no cross-hit
+        assert sql_rel != sql_arr
+        assert "sum(m.v*n.v)" in sql_rel and "mm(" not in sql_rel
+        assert "mm(" in sql_arr and "sum(m.v*n.v)" not in sql_arr
+        # warm re-requests stay within their representation
+        hits = pc.hits
+        assert pc.dag_sql(roots, d_rel, tail="multi_root") == sql_rel
+        assert pc.dag_sql(roots, d_arr, tail="multi_root") == sql_arr
+        assert pc.hits == hits + 2 and pc.misses == misses + 1
+
+    def test_engines_sharing_cache_never_cross_representations(self,
+                                                               tmp_path):
+        """End to end: a relational and an array engine over ONE warm store
+        both execute correctly — each representation's plan round-trips
+        through its own entry."""
+        pc = PlanCache(path=str(tmp_path / "plans.db"))
+        a, b = E.var("a", (3, 4)), E.var("b", (4, 2))
+        roots = [E.matmul(a, b)]
+        env = {"a": RNG.randn(3, 4), "b": RNG.randn(4, 2)}
+        want = env["a"] @ env["b"]
+        out_rel, = SQLEngine(plan_cache_=pc).evaluate(roots, env)
+        out_arr, = SQLEngine(dialect="array",
+                             plan_cache_=pc).evaluate(roots, env)
+        # a second pair over the same store: pure hits, same results
+        before = pc.misses
+        out_rel2, = SQLEngine(plan_cache_=pc).evaluate(roots, env)
+        out_arr2, = SQLEngine(dialect="array",
+                              plan_cache_=pc).evaluate(roots, env)
+        assert pc.misses == before
+        for out in (out_rel, out_arr, out_rel2, out_arr2):
+            np.testing.assert_allclose(out, want, atol=TOL)
+
 
 class TestPlanCacheStore:
     def test_memory_roundtrip_and_stats(self):

@@ -41,8 +41,10 @@ def grad_roots():
 
 
 def multi(roots, dialect):
-    return sqlgen.to_sql92(roots, select=sqlgen.multi_root_select(roots),
-                           dialect=dialect)
+    """The SQLEngine statement shape: representation-appropriate multi-root
+    tail through the representation-dispatching entry point."""
+    return sqlgen.to_sql(roots, select=sqlgen.multi_root_tail(roots, dialect),
+                         dialect=dialect)
 
 
 CASES = {
@@ -79,6 +81,15 @@ CASES = {
     # Listing 10 style nested forward select
     "listing10_forward_arrays.sql":
         lambda: sqlgen.to_sql_arrays(forward_roots()),
+    # the array dialect: one single-row CTE per node over the UDF extension
+    "listing6_forward.array":
+        lambda: sqlgen.to_sql(forward_roots(), dialect="array"),
+    "gradients_multiroot.array":
+        lambda: multi(grad_roots(), "array"),
+    # the array-dialect training recursion (training_query routes the
+    # array representation to the Listing-10 array-calls rendering)
+    "listing10_training.array":
+        lambda: sqlgen.training_query(graph(), 10, SPEC.lr, "array"),
 }
 
 
@@ -105,7 +116,7 @@ def _zoo_roots(prim: str):
 
 for _prim in ("rowreduce", "softmax", "topk", "gather", "scatter",
               "rowshift", "recurrence"):
-    for _dia in ("sql92", "sqlite", "duckdb"):
+    for _dia in ("sql92", "sqlite", "duckdb", "array"):
         CASES[f"zoo_{_prim}.{_dia}"] = (
             lambda p=_prim, d=_dia: multi(_zoo_roots(p), d))
 

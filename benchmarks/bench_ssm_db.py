@@ -1,0 +1,215 @@
+"""SSM-in-SQL smoke benchmark: SSD scans and the LRU matrix recurrence.
+
+Times the state-space workloads of ``repro.db.zoo.ssm_to_sql`` across the
+two in-database representations and the JAX baseline, checking the ≤1e-4
+differential contract against ``nn/ssm.ssd_naive`` on the way:
+
+* **SSD / Mamba-2** — the kron-flattened scalar-decay scan: relational
+  (ONE recursive CTE over the (S, N·P) state relation) vs array (ONE
+  recursive CTE carrying an array-typed state row) vs an un-jitted
+  ``lax.scan``; plus the chunked execution (one query per chunk, state
+  carried through the h0 leaf);
+* **LRU** — the dense-block ``MatRecurrence`` layer, forward and
+  Algorithm-1 gradients, both representations;
+* **state-size growth curve** — wall time vs state size N (the N·P state
+  columns are the relational recursion's working set).
+
+Emits ``BENCH_ssm_db.json``.  CI runs it on sqlite (tier-1 smoke) and on
+duckdb (extras job) and uploads the artifact.
+
+Run:  PYTHONPATH=src python benchmarks/bench_ssm_db.py
+CI smoke:  … bench_ssm_db.py --seq 8 --state 2 --headdim 2 --curve 2,4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from common import timeit            # script mode (CI invocation)
+except ImportError:  # pragma: no cover - package mode
+    from .common import timeit
+from repro.db import HAVE_DUCKDB, zoo
+from repro.db.sql_engine import SQLEngine
+from repro.nn import ssm
+
+TOL = 1e-4
+
+
+def make_inputs(rng, s, n, p):
+    x = rng.randn(s, p).astype(np.float32)
+    a = (-rng.rand(s).astype(np.float32))           # log decay ≤ 0
+    b = (rng.randn(s, n) * 0.5).astype(np.float32)
+    c = (rng.randn(s, n) * 0.5).astype(np.float32)
+    return x, a, b, c
+
+
+def lax_scan_ssd(x, a, b, c):
+    """The un-jitted lax.scan baseline (op-by-op dispatch, like the SQL
+    engines — the jit/XLA-fused numbers live in the roofline benches)."""
+    da = jnp.exp(jnp.asarray(a))
+
+    def step(h, inp):
+        xt, dat, bt, ct = inp
+        h2 = dat * h + jnp.outer(bt, xt)
+        return h2, ct @ h2
+
+    h0 = jnp.zeros((b.shape[1], x.shape[1]))
+    _, ys = jax.lax.scan(step, h0, (jnp.asarray(x), da, jnp.asarray(b),
+                                    jnp.asarray(c)))
+    return jax.block_until_ready(ys)
+
+
+def engines(backend):
+    return [("relational", SQLEngine(backend=backend)),
+            ("array", SQLEngine(backend=backend, dialect="array"))]
+
+
+def bench_ssd(args, backend: str) -> dict:
+    rng = np.random.RandomState(0)
+    s, n, p = args.seq, args.state, args.headdim
+    x, a, b, c = make_inputs(rng, s, n, p)
+    y_ref, h_ref = ssm.ssd_naive(jnp.asarray(x[None, :, None, :]),
+                                 jnp.asarray(a[None, :, None]),
+                                 jnp.asarray(b[None]), jnp.asarray(c[None]))
+    y_ref = np.asarray(y_ref)[0, :, 0, :]
+    h_ref = np.asarray(h_ref)[0, 0]
+    t_jax = timeit(lambda: lax_scan_ssd(x, a, b, c), iters=args.timing_iters)
+
+    out = {"config": {"seq": s, "state": n, "headdim": p,
+                      "state_cols": n * p, "chunk": args.chunk},
+           "lax_scan_s": t_jax}
+    errs = []
+    for label, eng in engines(backend):
+        y_db, h_db = zoo.run_ssd_in_db(x, a, b, c, engine=eng)
+        out[f"{label}_s"] = timeit(
+            lambda: zoo.run_ssd_in_db(x, a, b, c, engine=eng),
+            iters=args.timing_iters)
+        err = max(float(np.abs(y_db - y_ref).max()),
+                  float(np.abs(h_db - h_ref).max()))
+        out[f"{label}_max_err"] = err
+        errs.append(err)
+        if label == "relational":
+            out["chunked_s"] = timeit(
+                lambda: zoo.run_ssd_in_db(x, a, b, c, chunk=args.chunk,
+                                          engine=eng),
+                iters=args.timing_iters)
+            y_ch, h_ch = zoo.run_ssd_in_db(x, a, b, c, chunk=args.chunk,
+                                           engine=eng)
+            errs.append(max(float(np.abs(y_ch - y_ref).max()),
+                            float(np.abs(h_ch - h_ref).max())))
+        eng.close()
+    out["within_tol"] = bool(max(errs) < TOL)
+    return out
+
+
+def bench_lru(args, backend: str) -> dict:
+    rng = np.random.RandomState(1)
+    s, d = args.seq, args.state * args.headdim      # comparable state size
+    u = rng.randn(s, d).astype(np.float32)
+    a = (rng.randn(d, d) * (0.5 / np.sqrt(d))).astype(np.float32)
+    wb = (rng.randn(d, d) * 0.5).astype(np.float32)
+    wc = (rng.randn(d, d) * 0.5).astype(np.float32)
+    y_ref, _ = zoo.lru_ref(u, a, wb, wc)
+
+    def jref():
+        bb = jnp.asarray(u) @ jnp.asarray(wb)
+
+        def step(h, bt):
+            h2 = h @ jnp.asarray(a) + bt
+            return h2, h2
+
+        _, hs = jax.lax.scan(step, jnp.zeros(d), bb)
+        return jax.block_until_ready(hs @ jnp.asarray(wc))
+
+    out = {"config": {"seq": s, "d_state": d},
+           "lax_scan_s": timeit(jref, iters=args.timing_iters)}
+    errs = []
+    for label, eng in engines(backend):
+        y_db = zoo.run_lru_in_db(u, a, wb, wc, engine=eng)
+        out[f"{label}_s"] = timeit(
+            lambda: zoo.run_lru_in_db(u, a, wb, wc, engine=eng),
+            iters=args.timing_iters)
+        errs.append(float(np.abs(y_db - y_ref).max()))
+        if label == "relational":  # Algorithm-1 backward, in-database
+            out["grads_s"] = timeit(
+                lambda: zoo.lru_grads_in_db(u, a, wb, wc, engine=eng),
+                iters=args.timing_iters)
+        eng.close()
+    out["max_err"] = max(errs)
+    out["within_tol"] = bool(max(errs) < TOL)
+    return out
+
+
+def bench_curve(args, backend: str) -> list[dict]:
+    """Wall time vs state size N at fixed seq/headdim — the growth curve
+    of the recursion's working set (N·P state columns per step)."""
+    points = []
+    for n in args.curve:
+        rng = np.random.RandomState(2)
+        x, a, b, c = make_inputs(rng, args.seq, n, args.headdim)
+        point = {"state": n, "state_cols": n * args.headdim,
+                 "lax_scan_s": timeit(lambda: lax_scan_ssd(x, a, b, c),
+                                      iters=args.timing_iters)}
+        for label, eng in engines(backend):
+            zoo.run_ssd_in_db(x, a, b, c, engine=eng)   # warm tables/plans
+            point[f"{label}_s"] = timeit(
+                lambda: zoo.run_ssd_in_db(x, a, b, c, engine=eng),
+                iters=args.timing_iters)
+            eng.close()
+        points.append(point)
+    return points
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seq", type=int, default=12)
+    ap.add_argument("--state", type=int, default=4, help="state size N")
+    ap.add_argument("--headdim", type=int, default=4, help="head dim P")
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--curve", default="2,4,8",
+                    help="comma-separated N values (empty to skip)")
+    ap.add_argument("--timing-iters", type=int, default=3)
+    ap.add_argument("--backend", default="sqlite",
+                    choices=["sqlite", "duckdb", "auto"])
+    ap.add_argument("--out", default="BENCH_ssm_db.json")
+    args = ap.parse_args()
+    args.curve = [int(v) for v in args.curve.split(",") if v]
+    backend = ("duckdb" if HAVE_DUCKDB else "sqlite") \
+        if args.backend == "auto" else args.backend
+
+    print(f"== SSM-in-SQL smoke, backend={backend} ==")
+    ssd = bench_ssd(args, backend)
+    print(f"ssd scan:  lax {ssd['lax_scan_s']*1e3:8.1f} ms | rel "
+          f"{ssd['relational_s']*1e3:8.1f} ms | array "
+          f"{ssd['array_s']*1e3:8.1f} ms | max err "
+          f"{max(ssd['relational_max_err'], ssd['array_max_err']):.2e}",
+          flush=True)
+    lru = bench_lru(args, backend)
+    print(f"lru layer: lax {lru['lax_scan_s']*1e3:8.1f} ms | rel "
+          f"{lru['relational_s']*1e3:8.1f} ms | array "
+          f"{lru['array_s']*1e3:8.1f} ms | max err {lru['max_err']:.2e}",
+          flush=True)
+    curve = bench_curve(args, backend)
+    for pt in curve:
+        print(f"  curve N={pt['state']:3d} ({pt['state_cols']:4d} cols): "
+              f"rel {pt['relational_s']*1e3:8.1f} ms | array "
+              f"{pt['array_s']*1e3:8.1f} ms", flush=True)
+
+    report = {"backend": backend, "have_duckdb": HAVE_DUCKDB,
+              "ssd": ssd, "lru": lru, "curve": curve,
+              "checks": {"ssd_within_1e-4": ssd["within_tol"],
+                         "lru_within_1e-4": lru["within_tol"]}}
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {args.out}\nchecks: {report['checks']}")
+    return 0 if all(report["checks"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

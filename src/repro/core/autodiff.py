@@ -126,6 +126,26 @@ def derive(z: E.Expr, seed: E.Expr, grads: dict[E.Var, E.Expr] | None = None
         s_prev = E.row_shift(z, -step)        # s_prev[t] = s[t-1] (fwd case)
         derive(z.b, lam, grads)
         derive(z.a, E.hadamard(lam, s_prev), grads)
+    elif isinstance(z, E.MatRecurrence):
+        # Matrix-valued scan adjoint: the same scan the other way with
+        # TRANSPOSED coefficients (forward z, row-vector state s):
+        #   λ_t = g_t + λ_{t+1} · A_{t+1}ᵀ
+        # then ∂b = λ and ∂A_t = s_{t-1}ᵀ λ_t — one outer product per
+        # step, stacked like the A relation (StepOuter).  The block shift
+        # A_{t+1} is a RowShift of the stack by a whole block (±D rows,
+        # zero-filled — exactly the λ boundary condition); transposition
+        # is the scan's own `transposed` flag, flipped.
+        d = z.b.shape[1]
+        step = -1 if not z.reverse else 1
+        a_next = E.row_shift(z.a, step * d)   # block t ↦ block t+1 (fwd)
+        lam = E.mat_recurrence(a_next, seed, reverse=not z.reverse,
+                               transposed=not z.transposed)
+        s_prev = E.row_shift(z, -step)        # s_prev[t] = s[t-1] (fwd)
+        derive(z.b, lam, grads)
+        if z.transposed:                      # s_t = s_{t-1}·A_tᵀ + b_t
+            derive(z.a, E.step_outer(lam, s_prev), grads)
+        else:
+            derive(z.a, E.step_outer(s_prev, lam), grads)
     elif isinstance(z, E.Const):
         pass  # constants carry no gradient
     elif isinstance(z, E.Var):

@@ -58,6 +58,24 @@ def affine_scan(av: jnp.ndarray, bv: jnp.ndarray,
     return outs
 
 
+def mat_affine_scan(av: jnp.ndarray, bv: jnp.ndarray, reverse: bool,
+                    transposed: bool) -> jnp.ndarray:
+    """s_t = s_{t∓1} · A_t + b_t with row-vector state; ``av`` is the
+    (T·D, D) block stack, A_t = av[(t-1)D:tD] (transposed: A_tᵀ)."""
+    t, d = bv.shape
+    blocks = av.reshape(t, d, d)
+    if transposed:
+        blocks = jnp.swapaxes(blocks, 1, 2)
+
+    def step(s, ab):
+        s2 = s @ ab[0] + ab[1]
+        return s2, s2
+
+    _, outs = jax.lax.scan(step, jnp.zeros_like(bv[0]), (blocks, bv),
+                           reverse=reverse)
+    return outs
+
+
 def _index_column(node: E.Expr, ev, n_rows: int) -> jnp.ndarray:
     """The (S,) int index column of a Gather/Scatter, bounds-checked when
     concrete.  Out-of-range indices are a contract violation the backends
@@ -114,6 +132,12 @@ def eval_node(node: E.Expr, ev) -> jnp.ndarray:
         return row_shift(ev(node.x), node.offset)
     if isinstance(node, E.Recurrence):
         return affine_scan(ev(node.a), ev(node.b), node.reverse)
+    if isinstance(node, E.MatRecurrence):
+        return mat_affine_scan(ev(node.a), ev(node.b), node.reverse,
+                               node.transposed)
+    if isinstance(node, E.StepOuter):
+        xv, yv = ev(node.x), ev(node.y)
+        return (xv[:, :, None] * yv[:, None, :]).reshape(node.shape)
     raise TypeError(f"unknown node {type(node)}")
 
 

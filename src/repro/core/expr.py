@@ -31,6 +31,17 @@ invariants of the base tier carry over:
   RowShift   shift rows, zero fill   index arithmetic + frame left join
   Recurrence s_t = a_t∘s_{t-1}+b_t   recursive CTE (the Listing-7 machinery)
 
+The **matrix-valued recurrence tier** (LRU/S5/Mamba-2 block scans)
+generalises the elementwise scan to per-step *matrix* coefficients:
+
+  MatRecurrence s_t = s_{t-1}·A_t + b_t   per-step (D, D) blocks stacked
+                                          into one (T·D, D) relation; a
+                                          recursive CTE whose tuple holds
+                                          the state row (D columns, or
+                                          one array-typed value)
+  StepOuter     out[tD+k, j] = x[t,k]·y[t,j]   the stacked per-step outer
+                                          product — Algorithm 1's ∂A_t
+
 Index relations (the ``idx`` child of Gather/Scatter) are ordinary
 ``{[i, j, v]}`` matrices of shape (S, 1) whose *values* are 0-based row
 numbers — at the SQL boundary the lowering adds the +1 of the 1-based
@@ -341,6 +352,51 @@ class Recurrence(Expr):
         return (self.a, self.b)
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class MatRecurrence(Expr):
+    """Matrix-valued affine scan down the rows (LRU/S5/Mamba-2 blocks):
+
+        forward:  s_t = s_{t-1} · A_t + b_t,   s_0 = 0,   t = 1..T
+        reverse:  s_t = s_{t+1} · A_t + b_t,   s_{T+1} = 0,   t = T..1
+
+    with the state a ROW vector s_t ∈ R^{1×D} and ``a`` the (T·D, D)
+    stack of per-step square blocks: A_t = a[(t-1)·D : t·D, :].
+    ``transposed`` uses A_tᵀ in the step — the Algorithm-1 adjoint scan
+    runs with transposed coefficients, no block-transpose node needed.
+    A non-zero initial state folds into ``b``: b₁' = s₀·A₁ + b₁.
+
+    Diagonal blocks (the LRU/S5 fast path) ARE the elementwise
+    :class:`Recurrence`; this node carries the dense-block case.  Both
+    representations lower to ONE genuine recursive CTE whose tuple
+    carries the whole state row: D columns with a scalar-subquery matvec
+    (relational — cell-granularity recursion cannot mix the D previous
+    cells under the single-reference/no-aggregate recursion rules), or
+    one array-typed value stepped by the ``mrecurstep`` UDF (array)."""
+
+    a: Expr = None           # (T·D, D) stacked blocks
+    b: Expr = None           # (T, D)
+    reverse: bool = False
+    transposed: bool = False
+
+    def children(self):
+        return (self.a, self.b)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StepOuter(Expr):
+    """The stacked per-step outer product: ``out[(t-1)·K + k, j] =
+    x[t, k] · y[t, j]`` for x (T, K), y (T, J) — shape (T·K, J).  This is
+    the shape of ∂loss/∂A for :class:`MatRecurrence` (one outer product
+    of cached state and adjoint per step, stacked like the A relation).
+    Lowers to a single equi-join on t with index arithmetic on i."""
+
+    x: Expr = None
+    y: Expr = None
+
+    def children(self):
+        return (self.x, self.y)
+
+
 # ---------------------------------------------------------------------------
 # constructors with shape checking
 # ---------------------------------------------------------------------------
@@ -468,6 +524,26 @@ def recurrence(a: Expr, b: Expr, reverse: bool = False, name=None
         raise ValueError(f"recurrence shapes: {a.shape} vs {b.shape}")
     return _named(Recurrence(name=name or _fresh("rec"), shape=a.shape,
                              a=a, b=b, reverse=bool(reverse)), name)
+
+
+def mat_recurrence(a: Expr, b: Expr, reverse: bool = False,
+                   transposed: bool = False, name=None) -> MatRecurrence:
+    t, d = b.shape
+    if a.shape != (t * d, d):
+        raise ValueError(
+            f"mat_recurrence coefficient stack must be (T·D, D) = "
+            f"({t * d}, {d}) for b {b.shape}, got {a.shape}")
+    return _named(MatRecurrence(name=name or _fresh("mrec"), shape=b.shape,
+                                a=a, b=b, reverse=bool(reverse),
+                                transposed=bool(transposed)), name)
+
+
+def step_outer(x: Expr, y: Expr, name=None) -> StepOuter:
+    if x.shape[0] != y.shape[0]:
+        raise ValueError(f"step_outer step counts: {x.shape} vs {y.shape}")
+    return _named(StepOuter(name=name or _fresh("souter"),
+                            shape=(x.shape[0] * x.shape[1], y.shape[1]),
+                            x=x, y=y), name)
 
 
 # ---------------------------------------------------------------------------

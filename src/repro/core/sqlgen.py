@@ -107,6 +107,8 @@ def dag_signature(roots: list[E.Expr], extra=()) -> str:
             fields.append(f"off={n.offset}")
         elif isinstance(n, E.Recurrence):
             fields.append(f"rev={int(n.reverse)}")
+        elif isinstance(n, E.MatRecurrence):
+            fields.append(f"rev={int(n.reverse)},tr={int(n.transposed)}")
         elif isinstance(n, ReduceDeriv):
             fields.append(f"axis={n.axis}")
         fields += [str(idx[id(c)]) for c in n.children()]
@@ -214,7 +216,124 @@ def _cte_sql(node: E.Expr, nm: dict[int, str], dialect) -> str:
                 f"    from {me} as r\n"
                 f"    inner join {a} as am on am.i = {nxt} and am.j = r.j\n"
                 f"    inner join {b} as bm on bm.i = {nxt} and bm.j = r.j")
+    if isinstance(node, E.StepOuter):
+        # stacked per-step outer product: one equi-join on the step index,
+        # the block row recovered by index arithmetic (matches the (T·D, D)
+        # stacking convention of MatRecurrence's coefficient relation)
+        k = node.x.shape[1]
+        return (f"select ({k} * (m.i - 1)) + m.j as i, n.j, m.v * n.v as v\n"
+                f"  from {n(node.x)} as m inner join {n(node.y)} as n"
+                f" on m.i = n.i")
     raise TypeError(type(node))
+
+
+def _mat_scan_bounds(node: E.MatRecurrence) -> tuple[int, str, str]:
+    """(anchor step, next-step expression, continue guard) of the scan's
+    t-walk, shared by every MatRecurrence rendering."""
+    t_rows = node.shape[0]
+    if not node.reverse:
+        return 1, "r.t + 1", f"r.t < {t_rows}"
+    return t_rows, "r.t - 1", "r.t > 1"
+
+
+def _mat_scan_ctes_columns(node: E.MatRecurrence, nm: dict[int, str]
+                           ) -> list[str]:
+    """The matrix-valued scan as PURE SQL (the sql92 golden rendering):
+    ONE genuine recursive CTE whose tuple carries the WHOLE (1, D) state
+    row as D columns (``{me}_scan(t, s1..sD)``), plus the unpivot back to
+    cells.  The matvec s·A_t is spelled as D² correlated scalar
+    subqueries against the (T·D, D) coefficient stack — every engine's
+    recursive-CTE restrictions are satisfied at once: the recursive
+    table is referenced exactly once, the recursive select is
+    aggregate-free, and no self-join is needed because the row rides one
+    tuple.  (Cell-granularity recursion cannot express the matvec at
+    all: mixing the D previous-state cells needs an aggregate over — or
+    a second reference to — the recursive table, both forbidden.)
+
+    This rendering references the coefficient child O(D²) times, which
+    engines that expand CTE references by substitution (sqlite) multiply
+    through nested scans — the executable dialects therefore render the
+    packed form (:func:`_mat_scan_ctes_packed`) instead."""
+    me, a, b = nm[id(node)], nm[id(node.a)], nm[id(node.b)]
+    t_rows, d = node.shape
+    cols = ", ".join(f"s{j}" for j in range(1, d + 1))
+    anchor_t, nxt, guard = _mat_scan_bounds(node)
+    base = f"r.t*{d}" if not node.reverse else f"(r.t - 2)*{d}"
+    anchor = ", ".join(
+        f"(select v from {b} as bm where bm.i = {anchor_t} and bm.j = {j})"
+        for j in range(1, d + 1))
+    exprs = []
+    for j in range(1, d + 1):
+        if node.transposed:  # s·A_tᵀ: a[base+j, k]
+            cell = lambda k: f"am.i = {base} + {j} and am.j = {k}"
+        else:                # s·A_t:  a[base+k, j]
+            cell = lambda k: f"am.i = {base} + {k} and am.j = {j}"
+        terms = "\n      + ".join(
+            f"r.s{k} * (select v from {a} as am where {cell(k)})"
+            for k in range(1, d + 1))
+        exprs.append(
+            f"{terms}\n      + (select v from {b} as bm"
+            f" where bm.i = {nxt} and bm.j = {j})")
+    scan = (f"{me}_scan(t, {cols}) as (\n"
+            f"  select {anchor_t}, {anchor}\n"
+            f"  union all\n"
+            f"  select {nxt},\n    " + ",\n    ".join(exprs) + "\n"
+            f"    from {me}_scan as r\n"
+            f"   where {guard}\n)")
+    unpivot = "\n  union all ".join(
+        f"select t as i, {j} as j, s{j} as v from {me}_scan"
+        for j in range(1, d + 1))
+    return [scan, f"{me}(i, j, v) as (\n  {unpivot}\n)"]
+
+
+def _mat_scan_ctes_packed(node: E.MatRecurrence, nm: dict[int, str],
+                          dialect) -> list[str]:
+    """The matrix-valued scan for the EXECUTABLE relational dialects
+    (sqlite/duckdb): each child relation is packed ONCE into an array
+    codec inside the statement (order-independent ``group_concat`` of
+    ``i,j,v`` cell tags, reassembled by the ``mcellcat`` UDF at exact
+    %.17g float round-trip), the recursion carries one packed (1, D)
+    state row stepped by ``mrecurstep``, and the unpivot joins the scan
+    against a series on j (``mcell``).  Every CTE here references each
+    child exactly once — sqlite expands CTE references by textual
+    substitution, so the pure-SQL column rendering's O(D²) coefficient
+    references multiply through nested scans (Algorithm 1 nests the
+    adjoint scan's seed over the forward scan) until the 65535-reference
+    hard limit or the 3.34 flattener's LEFT-JOIN mis-ordering; packing
+    keeps composition linear."""
+    me, a, b = nm[id(node)], nm[id(node.a)], nm[id(node.b)]
+    t_rows, d = node.shape
+    tr = int(node.transposed)
+    anchor_t, nxt, guard = _mat_scan_bounds(node)
+    tag = "printf('%d,%d,%.17g', i, j, v)"
+    packs = [
+        f"{me}_pa(m) as (\n  select mcellcat(group_concat({tag}, '|'),"
+        f" {t_rows * d}, {d}) as m from {a}\n)",
+        f"{me}_pb(m) as (\n  select mcellcat(group_concat({tag}, '|'),"
+        f" {t_rows}, {d}) as m from {b}\n)",
+    ]
+    pa, pb = f"(select m from {me}_pa)", f"(select m from {me}_pb)"
+    scan = (f"{me}_scan(t, s) as (\n"
+            f"  select {anchor_t},"
+            f" mrecurstep({pa}, mconst(1,{d},0.0), {pb}, {anchor_t}, {tr})\n"
+            f"  union all\n"
+            f"  select {nxt}, mrecurstep({pa}, r.s, {pb}, {nxt}, {tr})\n"
+            f"    from {me}_scan as r\n"
+            f"   where {guard}\n)")
+    unpivot = (f"{me}(i, j, v) as (\n"
+               f"  select r.t, q.j, mcell(r.s, 1, q.j) as v\n"
+               f"  from {me}_scan as r cross join\n"
+               f"       {dialect.series_from(d, 'q', 'j')}\n)")
+    return packs + [scan, unpivot]
+
+
+def _mat_scan_ctes(node: E.MatRecurrence, nm: dict[int, str],
+                   dialect) -> list[str]:
+    """Dialect-dispatching MatRecurrence lowering — both forms are ONE
+    genuine recursive CTE carrying the whole state row per tuple."""
+    if dialect.mat_scan_rendering == "packed":
+        return _mat_scan_ctes_packed(node, nm, dialect)
+    return _mat_scan_ctes_columns(node, nm)
 
 
 def _with_keyword(dialect, recursive: bool = False) -> str:
@@ -232,8 +351,13 @@ def _render_ctes(roots: list[E.Expr], dialect
     ctes: list[str] = []
     has_scan = False
     for node in order:
-        has_scan = has_scan or isinstance(node, E.Recurrence)
-        if not isinstance(node, E.Var):
+        has_scan = has_scan or isinstance(node, (E.Recurrence,
+                                                 E.MatRecurrence))
+        if isinstance(node, E.Var):
+            continue
+        if isinstance(node, E.MatRecurrence):
+            ctes += _mat_scan_ctes(node, nm, dialect)
+        else:
             ctes.append(f"{nm[id(node)]}(i, j, v) as "
                         f"(\n  {_cte_sql(node, nm, dialect)}\n)")
     return ctes, nm, has_scan
@@ -578,15 +702,31 @@ def _array_cte_sql(node: E.Expr, nm: dict[int, str]) -> str:
         return f"mscatter({ref(node.x)}, {ref(node.idx)}, {node.shape[0]})"
     if isinstance(node, E.RowShift):
         return f"mrowshift({ref(node.x)}, {node.offset})"
+    if isinstance(node, E.StepOuter):
+        return f"mstepouter({ref(node.x)}, {ref(node.y)})"
     raise TypeError(type(node))
+
+
+def _array_rows_reassembly(me: str) -> str:
+    """The trajectory-reassembly CTE shared by both scan lowerings: each
+    scan row's (t, state) pair is tagged ``t:<codec>`` and concatenated
+    with the engine's NATIVE string aggregate (``group_concat`` — sqlite
+    builtin, duckdb ``string_agg`` alias), then one scalar UDF
+    (``mrowcat``) splits, sorts by t and vstacks.  Order-independent, so
+    forward/reverse scans and duckdb's unordered aggregation all
+    reassemble correctly — and, unlike the former ``magg_rows`` Python
+    aggregate (sqlite-only: duckdb has no Python aggregate API), it runs
+    on every connection the array dialect rides."""
+    return (f"{me}(m) as (\n"
+            f"  select mrowcat(group_concat(cast(t as text) || ':' || s,"
+            f" '|')) as m from {me}_scan\n)")
 
 
 def _array_scan_ctes(node: E.Recurrence, nm: dict[int, str]) -> list[str]:
     """The Recurrence as TWO array-dialect CTEs: a recursive scan whose
     state is ONE array-typed row per step (``s_t`` as a (1, C) matrix — not
-    the relational recursion's C cells per step), and the reassembly of the
-    (T, C) trajectory via the ``magg_rows`` aggregate (order-independent,
-    so forward and reverse scans share it)."""
+    the relational recursion's C cells per step), and the dialect-portable
+    reassembly of the (T, C) trajectory (:func:`_array_rows_reassembly`)."""
     me = nm[id(node)]
     a, b = (f"(select m from {nm[id(node.a)]})",
             f"(select m from {nm[id(node.b)]})")
@@ -600,8 +740,32 @@ def _array_scan_ctes(node: E.Recurrence, nm: dict[int, str]) -> list[str]:
             f"  select {nxt}, {step}\n"
             f"    from {me}_scan as r\n"
             f"   where {guard}\n)")
-    final = f"{me}(m) as (\n  select magg_rows(t, s) as m from {me}_scan\n)"
-    return [scan, final]
+    return [scan, _array_rows_reassembly(me)]
+
+
+def _array_mat_scan_ctes(node: E.MatRecurrence, nm: dict[int, str]
+                         ) -> list[str]:
+    """The matrix-valued scan in the array dialect: ONE genuine recursive
+    CTE whose state is a single array-typed (1, D) row, each step one
+    ``mrecurstep`` call (s·A_t + b_t, block sliced from the stack inside
+    the UDF; the `transposed` flag rides as the last argument), then the
+    shared trajectory reassembly.  This is the lowering the relational
+    representation cannot express recursively — the matvec lives inside
+    the scalar UDF, so the recursive member stays aggregate-free."""
+    me = nm[id(node)]
+    a, b = (f"(select m from {nm[id(node.a)]})",
+            f"(select m from {nm[id(node.b)]})")
+    d = node.shape[1]
+    tr = int(node.transposed)
+    anchor, nxt, guard = _mat_scan_bounds(node)
+    scan = (f"{me}_scan(t, s) as (\n"
+            f"  select {anchor},"
+            f" mrecurstep({a}, mconst(1,{d},0.0), {b}, {anchor}, {tr})\n"
+            f"  union all\n"
+            f"  select {nxt}, mrecurstep({a}, r.s, {b}, {nxt}, {tr})\n"
+            f"    from {me}_scan as r\n"
+            f"   where {guard}\n)")
+    return [scan, _array_rows_reassembly(me)]
 
 
 def to_sql_array_ctes(roots: list[E.Expr], select=None) -> str:
@@ -620,6 +784,9 @@ def to_sql_array_ctes(roots: list[E.Expr], select=None) -> str:
         if isinstance(node, E.Recurrence):
             has_scan = True
             ctes += _array_scan_ctes(node, nm)
+        elif isinstance(node, E.MatRecurrence):
+            has_scan = True
+            ctes += _array_mat_scan_ctes(node, nm)
         else:
             ctes.append(f"{nm[id(node)]}(m) as "
                         f"(\n  select {_array_cte_sql(node, nm)} as m\n)")

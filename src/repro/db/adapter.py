@@ -59,6 +59,10 @@ class Adapter:
     #: whether ``insert_matrix_json`` (engine-side json_each expansion) is
     #: available — probed per connection where the backend supports it
     supports_json_ingest = False
+    #: whether the engine-side JSON path should be the *default* matrix
+    #: ingestion (``relation_io.write_matrix`` consults this) — only where
+    #: the runtime engine expands JSON in linear time
+    prefers_json_ingest = False
 
     def __init__(self, conn):
         self.conn = conn
@@ -161,13 +165,29 @@ class SQLiteAdapter(Adapter):
     #: is 999 on older builds — 300 rows × 3 cols stays under it
     ROWS_PER_STMT = 300
 
+    #: first sqlite release whose JSON table-functions extract values in
+    #: linear time (the 3.38 JSON rewrite); before it ``json_each`` is
+    #: O(array length) per row and the engine-side parse loses to VALUES
+    #: (measured on this container's 3.34 — ``bench_mnist_db.py``)
+    JSON_LINEAR_VERSION = (3, 38)
+
     def __init__(self, path: str = ":memory:"):
         super().__init__(sqlite3.connect(path))
+        #: runtime engine version — instance-level so tests can pin it
+        self.sqlite_version = sqlite3.sqlite_version_info
         try:  # table-valued JSON ingestion needs the (default) JSON1 ext.
             self.conn.execute("select count(*) from json_each('[0]')")
             self.supports_json_ingest = True
         except sqlite3.Error:  # pragma: no cover - JSON1-less builds
             self.supports_json_ingest = False
+
+    @property
+    def prefers_json_ingest(self) -> bool:
+        """Auto-select the engine-side ``json_each`` ingestion on builds
+        where it is linear (≥ :data:`JSON_LINEAR_VERSION`); older engines
+        keep the multi-row VALUES batching."""
+        return (self.supports_json_ingest
+                and self.sqlite_version >= self.JSON_LINEAR_VERSION)
 
     #: cells per bound JSON array.  sqlite ≤3.37 extracts json_each values
     #: in O(array length) per row — one giant array is quadratic; bounded

@@ -159,20 +159,64 @@ def _udf_mmaxind(x: str, red: str) -> str:
         (json_to_matrix(x) == json_to_matrix(red)).astype(np.float64))
 
 
-class _MAggRows:
-    """Aggregate assembling scan-state rows back into one matrix: collects
-    (t, row) pairs, sorts by t, vstacks — order-independent, so both the
-    forward and the reverse recursion reassemble correctly."""
+def _udf_mrecurstep(a: str, s: str, b: str, t, trans) -> str:
+    """One step of the matrix-valued scan (``MatRecurrence``): slice block
+    ``t`` (1-based) out of the (T·D, D) stack, return the (1, D) row
+    ``s · A_t + b_t`` (``trans`` ≠ 0 uses A_tᵀ — the Algorithm-1 adjoint
+    scan's transposed coefficients).  Keeping the matvec inside one scalar
+    call is what lets the array dialect run the scan as a genuine
+    recursive CTE: the recursive member stays aggregate-free."""
+    t = int(t)
+    av, sv, bv = json_to_matrix(a), json_to_matrix(s), json_to_matrix(b)
+    d = av.shape[1]
+    blk = av[(t - 1) * d:t * d, :]
+    if int(trans):
+        blk = blk.T
+    return matrix_to_json(sv @ blk + bv[t - 1:t, :])
 
-    def __init__(self):
-        self.rows: list[tuple[int, str]] = []
 
-    def step(self, t, m):
-        self.rows.append((int(t), m))
+def _udf_mstepouter(x: str, y: str) -> str:
+    """The stacked per-step outer product (``StepOuter``): x (T, K),
+    y (T, J) → (T·K, J) with out[(t-1)K+k, j] = x[t,k]·y[t,j]."""
+    xv, yv = json_to_matrix(x), json_to_matrix(y)
+    return matrix_to_json(
+        (xv[:, :, None] * yv[:, None, :]).reshape(-1, yv.shape[1]))
 
-    def finalize(self) -> str:
-        return matrix_to_json(
-            np.vstack([json_to_matrix(m) for _t, m in sorted(self.rows)]))
+
+def _udf_mcellcat(concat, r, c) -> str:
+    """Reassemble a CELL relation from concatenated ``i,j,v`` tags (the
+    packed MatRecurrence lowering's child ingestion): order-independent,
+    missing cells zero-fill — the outer-join semantics of the dense
+    relation invariant.  ``%.17g`` tags round-trip float64 exactly."""
+    out = np.zeros((int(r), int(c)))
+    if concat:
+        for tok in concat.split("|"):
+            i, j, v = tok.split(",")
+            out[int(i) - 1, int(j) - 1] = float(v)
+    return matrix_to_json(out)
+
+
+def _udf_mcell(m: str, i, j) -> float:
+    """One cell (1-based) of an array codec — the packed scan's unpivot."""
+    return float(json_to_matrix(m)[int(i) - 1, int(j) - 1])
+
+
+def _udf_mrowcat(concat) -> str:
+    """Reassemble a scan trajectory from the concatenated ``t:<codec>``
+    tags (``group_concat(cast(t as text) || ':' || s, '|')``): split,
+    sort by t, vstack.  Order-independent — forward scans, reverse scans
+    and duckdb's unordered ``string_agg`` all land in the same matrix.
+    This scalar UDF replaces the former ``magg_rows`` Python aggregate:
+    duckdb has no Python aggregate API, but native string aggregation +
+    one scalar call it can run."""
+    if concat is None:  # empty scan (never rendered, but NULL-safe)
+        return matrix_to_json(np.zeros((0, 0)))
+    rows = []
+    for tok in concat.split("|"):
+        t, m = tok.split(":", 1)
+        rows.append((int(t), m))
+    rows.sort()
+    return matrix_to_json(np.vstack([json_to_matrix(m) for _t, m in rows]))
 
 
 #: name → (nargs, python impl).  These are the matrix operations of the
@@ -211,13 +255,13 @@ ARRAY_UDFS: dict[str, tuple[int, object]] = {
         _np_row_shift(json_to_matrix(m), off))),
     "mrow": (2, _udf_mrow),
     "mmaxind": (2, _udf_mmaxind),
-}
-
-#: name → (nargs, aggregate class) — sqlite ``create_aggregate`` UDAFs
-#: (duckdb has no Python aggregate API; the array-dialect Recurrence
-#: lowering therefore needs a sqlite connection)
-ARRAY_AGGREGATES: dict[str, tuple[int, type]] = {
-    "magg_rows": (2, _MAggRows),
+    # matrix-valued recurrence tier: the scan step, the stacked outer
+    # product of its VJP, and the portable trajectory reassembly
+    "mrecurstep": (5, _udf_mrecurstep),
+    "mstepouter": (2, _udf_mstepouter),
+    "mrowcat": (1, _udf_mrowcat),
+    "mcellcat": (3, _udf_mcellcat),
+    "mcell": (3, _udf_mcell),
 }
 
 
@@ -226,20 +270,23 @@ ARRAY_AGGREGATES: dict[str, tuple[int, type]] = {
 # ---------------------------------------------------------------------------
 
 def _register_sqlite_udfs(conn) -> None:
-    """The scalar builtins sqlite lacks + the whole UDF array extension
-    (scalars and aggregates) — shared by the sqlite and array dialects."""
+    """The scalar builtins sqlite lacks + the whole UDF array extension —
+    shared by the sqlite and array dialects.  All scalars: the scan
+    reassembly is native string aggregation + the ``mrowcat`` scalar, so
+    no Python aggregate exists anywhere (duckdb has no aggregate API —
+    one registration surface serves both engines)."""
     conn.create_function("exp", 1, math.exp, deterministic=True)
     conn.create_function("greatest", 2, max, deterministic=True)
     for name, (nargs, fn) in ARRAY_UDFS.items():
         conn.create_function(name, nargs, fn, deterministic=True)
-    for name, (nargs, cls) in ARRAY_AGGREGATES.items():
-        conn.create_aggregate(name, nargs, cls)
 
 
 def _register_duckdb_udfs(conn) -> None:  # pragma: no cover - needs duckdb
     """Register the array extension on a duckdb connection.  duckdb's
     ``create_function`` needs explicit types for lambdas; aggregates have
-    no Python API, so the Recurrence scan CTE stays sqlite-only."""
+    no Python API — which is why the scan reassembly renders as native
+    ``group_concat`` + the ``mrowcat`` scalar, so the Recurrence (and
+    MatRecurrence) CTEs execute on duckdb with no Python aggregate."""
     try:
         from duckdb.typing import DOUBLE, VARCHAR
         types = {"mscale": ([DOUBLE, VARCHAR], VARCHAR),
@@ -249,7 +296,11 @@ def _register_duckdb_udfs(conn) -> None:  # pragma: no cover - needs duckdb
                  "mtopk": ([VARCHAR, DOUBLE], VARCHAR),
                  "mscatter": ([VARCHAR, VARCHAR, DOUBLE], VARCHAR),
                  "mrowshift": ([VARCHAR, DOUBLE], VARCHAR),
-                 "mrow": ([VARCHAR, DOUBLE], VARCHAR)}
+                 "mrow": ([VARCHAR, DOUBLE], VARCHAR),
+                 "mrecurstep": ([VARCHAR, VARCHAR, VARCHAR, DOUBLE, DOUBLE],
+                                VARCHAR),
+                 "mcellcat": ([VARCHAR, DOUBLE, DOUBLE], VARCHAR),
+                 "mcell": ([VARCHAR, DOUBLE, DOUBLE], DOUBLE)}
     except ImportError:  # older duckdb
         types = {}
     for name, (nargs, fn) in ARRAY_UDFS.items():
@@ -274,6 +325,13 @@ class Sql92Dialect:
     representation = "relational"
     #: whether constant matrices need the RECURSIVE keyword on the WITH
     series_is_recursive = False
+    #: MatRecurrence rendering — ``"columns"``: the pure-SQL recursive CTE
+    #: carrying the state row as D columns (golden, but its O(D²)
+    #: coefficient references multiply under sqlite's substitution-based
+    #: CTE expansion); ``"packed"``: children packed once into array
+    #: codecs (``mcellcat``), stepped by ``mrecurstep`` — what the
+    #: executable engines run (see ``core.sqlgen._mat_scan_ctes_packed``)
+    mat_scan_rendering = "columns"
 
     # -- scalar rendering ---------------------------------------------------
     def map_sql(self, fn: E.MapFn, v: str) -> str:
@@ -332,6 +390,7 @@ class SqliteDialect(Sql92Dialect):
     name = "sqlite"
     series_is_recursive = True
     supports_listing7 = False  # "circular reference" — see module docstring
+    mat_scan_rendering = "packed"
 
     def series_from(self, n: int, alias: str, col: str) -> str:
         return (f"(with recursive s(x) as"
@@ -347,6 +406,7 @@ class SqliteDialect(Sql92Dialect):
 
 class DuckDBDialect(Sql92Dialect):
     name = "duckdb"
+    mat_scan_rendering = "packed"
 
     def topk_mask_select(self, src: str, k: int) -> str:
         return _windowed_topk_mask(src, k)
@@ -363,13 +423,15 @@ class ArrayDialect(Sql92Dialect):
     Listing 10): every matrix — leaf table, CTE, query result — is ONE row
     whose single column ``m`` holds the JSON array codec, and every IR node
     is a call into the UDF array extension instead of a join over cells.
-    ``Recurrence`` is the exception: it renders as a recursive CTE whose
-    state is one array-typed row per step (``mrow``/``magg_rows``), the
-    Listing-7 machinery at matrix granularity.
+    The scans (``Recurrence``/``MatRecurrence``) are the exception: they
+    render as recursive CTEs whose state is one array-typed row per step
+    (``mrow``/``mrecurstep``), the Listing-7 machinery at matrix
+    granularity, reassembled by native string aggregation + the
+    ``mrowcat`` scalar.
 
-    The dialect rides an existing *engine* connection (sqlite by default;
-    duckdb works for everything but Recurrence, whose reassembly aggregate
-    has no duckdb Python API) — pass ``SQLEngine(dialect="array")``.
+    The dialect rides an existing *engine* connection — sqlite by
+    default, duckdb for the whole IR including the scans (nothing needs
+    a Python aggregate) — pass ``SQLEngine(dialect="array")``.
     """
 
     name = "array"

@@ -20,9 +20,19 @@ Environment:
     Path of the persistent store.  Default
     ``~/.cache/repro/plan_cache.db``; set to ``off`` (or ``0``) to keep the
     cache memory-only.
+
+``REPRO_PLAN_CACHE_CAP``
+    LRU capacity (entries) of both layers; default 512.  Every distinct
+    (DAG × dialect × tail) topology is one entry — rendered SQL for deep
+    scan graphs runs to tens of KB, so an uncapped store grows without
+    bound under topology-churning workloads (per-(T, D) MatRecurrence
+    plans, state-size sweeps).  Eviction is least-recently-*used*: the
+    in-process dict keeps exact recency, the persistent table is pruned
+    on insert by its ``last_used`` column (touched on every hit).
 """
 from __future__ import annotations
 
+import collections
 import hashlib
 import inspect
 import os
@@ -33,7 +43,11 @@ from ..core import expr as E
 from ..core import sqlgen
 
 _ENV = "REPRO_PLAN_CACHE"
+_CAP_ENV = "REPRO_PLAN_CACHE_CAP"
 _DISABLED = {"off", "0", "none", "disabled"}
+
+#: default LRU capacity (entries) of the in-process AND persistent layers
+DEFAULT_CAP = 512
 
 _FINGERPRINT: str | None = None
 
@@ -83,15 +97,31 @@ class PlanCache:
     The sqlite layer is best-effort — any failure to open or write it
     (read-only home, concurrent lock) silently degrades to memory-only, so
     the execution backend never breaks on cache trouble.
+
+    Both layers are LRU-capped at ``cap`` entries (default
+    :data:`DEFAULT_CAP`, overridable via ``REPRO_PLAN_CACHE_CAP``): the
+    in-process dict evicts its least-recently-used key on insert, and
+    every insert prunes the persistent ``plans`` table down to the cap by
+    ``last_used``.  Hits record recency in memory only; the pending
+    touches are flushed to disk right before each pruning pass (and on
+    close), so the hot working set survives topology churn while the
+    get() hot path never writes.
     """
 
-    def __init__(self, path: str | None = "default"):
+    def __init__(self, path: str | None = "default", cap: int | None = None):
         if path == "default":
             path = default_path()
+        if cap is None:
+            try:  # cache trouble never breaks the backend — bad env too
+                cap = int(os.environ.get(_CAP_ENV, DEFAULT_CAP))
+            except ValueError:
+                cap = DEFAULT_CAP
+        self.cap = max(1, int(cap))
         self.path = path
         self.hits = 0
         self.misses = 0
-        self._mem: dict[str, str] = {}
+        self._mem: collections.OrderedDict[str, str] = collections.OrderedDict()
+        self._touched: set[str] = set()   # hit recency pending disk flush
         self._conn = None
         if path:
             try:
@@ -100,12 +130,39 @@ class PlanCache:
                 self._conn.execute(
                     "create table if not exists plans ("
                     " key text primary key, dialect text, sql text,"
-                    " created real)")
+                    " created real, last_used real)")
+                cols = [r[1] for r in self._conn.execute(
+                    "pragma table_info(plans)")]
+                if "last_used" not in cols:  # pre-LRU store: migrate in place
+                    self._conn.execute("alter table plans"
+                                       " add column last_used real")
+                    self._conn.execute("update plans set last_used = created")
                 self._conn.commit()
             except Exception:  # pragma: no cover - env-dependent degradation
                 self._conn = None
 
     # -- store --------------------------------------------------------------
+    def _mem_insert(self, key: str, sql: str) -> None:
+        self._mem[key] = sql
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.cap:
+            self._mem.popitem(last=False)
+
+    def _flush_touched(self) -> None:
+        """Write the recency of keys touched since the last flush.  Hits
+        stay pure in-memory operations (the cache's whole point is a
+        cheap hot path — one UPDATE + fsync per get() would cost more
+        than the render it saves); the persistent ``last_used`` only
+        needs to be current when it is *read*, i.e. right before a
+        put()'s pruning pass and at close()."""
+        if self._conn is None or not self._touched:
+            return
+        now = time.time()
+        self._conn.executemany(
+            "update plans set last_used = ? where key = ?",
+            [(now, k) for k in self._touched])
+        self._touched.clear()
+
     def get(self, key: str) -> str | None:
         sql = self._mem.get(key)
         if sql is None and self._conn is not None:
@@ -116,26 +173,43 @@ class PlanCache:
                 row = None
             if row:
                 sql = row[0]
-                self._mem[key] = sql
+                self._mem_insert(key, sql)
         if sql is None:
             self.misses += 1
         else:
             self.hits += 1
+            if key in self._mem:
+                self._mem.move_to_end(key)
+            if self._conn is not None:  # pending disk flush; else unbounded
+                self._touched.add(key)
         return sql
 
     def put(self, key: str, sql: str, dialect: str = "") -> None:
-        self._mem[key] = sql
+        self._mem_insert(key, sql)
         if self._conn is not None:
             try:
+                self._flush_touched()   # recency must be current for prune
+                # stamp AFTER the flush: the new plan must not look colder
+                # than the just-flushed hits, or an at-cap prune would
+                # evict the plan being inserted
+                now = time.time()
                 self._conn.execute(
-                    "insert or replace into plans values (?, ?, ?, ?)",
-                    (key, dialect, sql, time.time()))
+                    "insert or replace into plans values (?, ?, ?, ?, ?)",
+                    (key, dialect, sql, now, now))
+                n = self._conn.execute(
+                    "select count(*) from plans").fetchone()[0]
+                if n > self.cap:  # prune the coldest down to the cap
+                    self._conn.execute(
+                        "delete from plans where key in (select key from"
+                        " plans order by last_used asc, created asc"
+                        " limit ?)", (n - self.cap,))
                 self._conn.commit()
             except Exception:  # pragma: no cover
                 pass
 
     def clear(self) -> None:
         self._mem.clear()
+        self._touched.clear()
         if self._conn is not None:
             try:
                 self._conn.execute("delete from plans")
@@ -155,10 +229,15 @@ class PlanCache:
     @property
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self), "path": self.path}
+                "entries": len(self), "cap": self.cap, "path": self.path}
 
     def close(self) -> None:
         if self._conn is not None:
+            try:
+                self._flush_touched()
+                self._conn.commit()
+            except Exception:  # pragma: no cover
+                pass
             try:
                 self._conn.close()
             except Exception:  # pragma: no cover

@@ -115,12 +115,22 @@ def rows_to_reltensor(rows, shape: tuple[int, int]) -> RelTensor:
 
 def write_matrix(adapter: Adapter, name: str, x) -> None:
     """CREATE + bulk-ingest the relation for ``x`` (replacing any old one).
-    The fast path: vectorized pivot + the adapter's column ingestion.
-    (The table-valued JSON alternative, :func:`write_matrix_json`, moves
-    the pivot into the engine; ``bench_mnist_db.py`` races the two — it
-    only wins on JSON-optimised sqlite builds, so it is opt-in.)"""
+
+    Ingestion auto-selects per adapter: where the runtime engine expands
+    JSON in linear time (``adapter.prefers_json_ingest`` — sqlite ≥ 3.38),
+    the pivot moves *into* the engine via ``json_each``
+    (:func:`write_matrix_json`'s path); everywhere else — including this
+    container's sqlite 3.34, whose pre-3.38 ``json_each`` is quadratic —
+    the vectorized client pivot + column ingestion stays the default.
+    Non-finite values always take the VALUES path (sqlite's JSON parser
+    rejects NaN/Infinity tokens)."""
+    a = np.asarray(x, dtype=np.float64)
     adapter.create_table(name, MATRIX_COLUMNS)
-    adapter.insert_columns(name, matrix_to_columns(x))
+    if (getattr(adapter, "prefers_json_ingest", False) and a.ndim == 2
+            and np.isfinite(a).all()):
+        adapter.insert_matrix_json(name, a)
+    else:
+        adapter.insert_columns(name, matrix_to_columns(a))
 
 
 def write_matrix_json(adapter: Adapter, name: str, x) -> None:

@@ -8,10 +8,14 @@ Scatter / RowShift / Recurrence):
   combine (``kernels/moe_dispatch.py`` / ``nn/moe.py`` semantics);
 * :mod:`~repro.db.zoo.rwkv_to_sql` — the RWKV-6 time-mix recurrence as a
   recursive CTE and the token-shift channel mix
-  (``kernels/rwkv6_scan.py`` semantics).
+  (``kernels/rwkv6_scan.py`` semantics);
+* :mod:`~repro.db.zoo.ssm_to_sql` — state-space models: the SSD/Mamba-2
+  scalar-decay matrix-state scan (kron-flattened, chunked execution) and
+  the LRU/S5 layer over the matrix-valued ``MatRecurrence``
+  (``nn/ssm.py`` semantics).
 
 Every graph is an ordinary expression DAG: Algorithm-1 autodiff, all
-three dialects, the plan cache and ``SQLEngine`` apply unchanged.
+four dialects, the plan cache and ``SQLEngine`` apply unchanged.
 """
 from .moe_to_sql import (MoESQLConfig, init_moe_params, moe_combine_graph,
                          moe_dispatch_graph, moe_env, moe_env_batched,
@@ -21,6 +25,10 @@ from .rwkv_to_sql import (kron_index_relations, run_channel_mix_in_db,
                           run_rwkv6_in_db, rwkv6_env, rwkv6_static_env,
                           rwkv6_time_mix_graph, rwkv_channel_mix_graph,
                           rwkv_channel_mix_ref)
+from .ssm_to_sql import (lru_env, lru_grads_in_db, lru_layer_graph, lru_ref,
+                         run_lru_in_db, run_ssd_in_db, ssd_env,
+                         ssd_kron_relations, ssd_ref, ssd_scan_graph,
+                         ssd_static_env)
 
 __all__ = [
     "MoESQLConfig", "init_moe_params", "moe_ffn_graph", "moe_env",
@@ -30,4 +38,7 @@ __all__ = [
     "kron_index_relations", "rwkv6_time_mix_graph", "rwkv6_env",
     "rwkv6_static_env", "run_rwkv6_in_db", "rwkv_channel_mix_graph",
     "rwkv_channel_mix_ref", "run_channel_mix_in_db",
+    "ssd_kron_relations", "ssd_scan_graph", "ssd_static_env", "ssd_env",
+    "ssd_ref", "run_ssd_in_db", "lru_layer_graph", "lru_env", "lru_ref",
+    "run_lru_in_db", "lru_grads_in_db",
 ]

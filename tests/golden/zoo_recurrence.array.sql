@@ -6,7 +6,7 @@ with recursive rec_c0_scan(t, s) as (
    where r.t < 4
 ),
 rec_c0(m) as (
-  select magg_rows(t, s) as m from rec_c0_scan
+  select mrowcat(group_concat(cast(t as text) || ':' || s, '|')) as m from rec_c0_scan
 ),
 rec_c1_scan(t, s) as (
   select 4, mrow((select m from zb), 4)
@@ -16,7 +16,7 @@ rec_c1_scan(t, s) as (
    where r.t > 1
 ),
 rec_c1(m) as (
-  select magg_rows(t, s) as m from rec_c1_scan
+  select mrowcat(group_concat(cast(t as text) || ':' || s, '|')) as m from rec_c1_scan
 )
 select 0 as r, m from rec_c0
 union all select 1 as r, m from rec_c1;

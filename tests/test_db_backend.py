@@ -158,6 +158,65 @@ class TestRelationIO:
             np.testing.assert_allclose(
                 relation_io.read_matrix(ad, "mj", a.shape), a, rtol=1e-12)
 
+    def test_json_ingestion_version_gate(self):
+        """The auto-select satellite: ``write_matrix`` routes through the
+        engine-side json_each path only on builds whose JSON functions
+        are linear (≥ 3.38) — both arms exercised by pinning the detected
+        version, spying which ingestion ran, and checking the tables
+        agree up to the ~1-ulp text→real parse."""
+        a = RNG.randn(6, 3)
+        calls = []
+        with connect("sqlite") as ad:
+            if not ad.supports_json_ingest:  # pragma: no cover
+                pytest.skip("sqlite built without JSON1")
+            orig_json = ad.insert_matrix_json
+            orig_cols = ad.insert_columns
+            ad.insert_matrix_json = \
+                lambda *args: (calls.append("json"), orig_json(*args))[1]
+            ad.insert_columns = \
+                lambda *args: (calls.append("values"), orig_cols(*args))[1]
+
+            ad.sqlite_version = (3, 34, 1)       # the container's engine
+            assert not ad.prefers_json_ingest
+            relation_io.write_matrix(ad, "m_old", a)
+            assert calls == ["values"]
+
+            ad.sqlite_version = (3, 38, 0)       # JSON-linear build
+            assert ad.prefers_json_ingest
+            relation_io.write_matrix(ad, "m_new", a)
+            assert calls == ["values", "json"]
+            np.testing.assert_allclose(
+                relation_io.read_matrix(ad, "m_new", a.shape),
+                relation_io.read_matrix(ad, "m_old", a.shape), rtol=1e-12)
+
+    def test_json_ingestion_gate_falls_back_on_non_finite(self):
+        """Even on a preferred build, NaN/inf matrices must take the
+        VALUES path (sqlite's JSON parser rejects the tokens)."""
+        a = np.ones((2, 2))
+        a[1, 1] = np.inf
+        with connect("sqlite") as ad:
+            if not ad.supports_json_ingest:  # pragma: no cover
+                pytest.skip("sqlite built without JSON1")
+            ad.sqlite_version = (3, 40, 0)
+            relation_io.write_matrix(ad, "m_inf", a)   # must not raise
+            assert np.isinf(relation_io.read_matrix(ad, "m_inf",
+                                                    a.shape)[1, 1])
+
+    def test_json_gate_engine_differential(self):
+        """A full SQLEngine evaluation with the json path forced on stays
+        ≤1e-4 vs dense (the ulp-level parse drift is far inside TOL)."""
+        g, w0, x, y, _ = mlp(n_rows=6)
+        loss = g.loss
+        env = {**w0, "img": x, "one_hot": y}
+        jenv = {k: jnp.asarray(v) for k, v in env.items()}
+        ref, = Engine("dense").eval_fn([loss])(jenv)
+        eng = SQLEngine(plan_cache_=False)
+        eng.adapter.sqlite_version = (3, 38, 0)
+        assert eng.adapter.prefers_json_ingest
+        out, = eng.evaluate([loss], env)
+        np.testing.assert_allclose(out, np.asarray(ref), atol=TOL)
+        eng.close()
+
 
 # ---------------------------------------------------------------------------
 # dialects & adapters

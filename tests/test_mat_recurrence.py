@@ -1,0 +1,276 @@
+"""The matrix-valued recurrence tier: MatRecurrence + StepOuter.
+
+Differential contract across every backend:
+
+* forward, all four (reverse × transposed) variants: dense ≡ rel_engine ≡
+  relational SQL (sqlite) ≡ array SQL ≡ a per-step numpy oracle;
+* the sql92 rendering of the scan is genuinely executable (the unrolled
+  chain needs no series/UDFs — it runs verbatim on a bare connection);
+* Algorithm-1 gradients (the transposed-coefficient adjoint scan +
+  StepOuter ∂A stacks) ≡ jax.grad of the dense evaluation, and the
+  gradient DAGs *execute* in both representations;
+* diagonal blocks reproduce the elementwise Recurrence (the LRU/S5
+  diagonal fast path IS the existing scan);
+* static attributes (reverse, transposed) key distinct plans;
+* duckdb (CI extras job): both representations execute on a real duckdb
+  connection — the array scan with NO Python aggregate.
+"""
+import sqlite3
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Engine, dense, sqlgen
+from repro.core import expr as E
+from repro.core.autodiff import gradients
+from repro.db import HAVE_DUCKDB
+from repro.db.sql_engine import SQLEngine
+
+TOL = 1e-4
+RNG = np.random.RandomState(11)
+
+T, D = 5, 3
+AV = (RNG.randn(T * D, D) * 0.4).astype(np.float32)   # stacked blocks
+BV = RNG.randn(T, D).astype(np.float32)
+ENV = {"a": AV, "b": BV}
+JENV = {k: jnp.asarray(v) for k, v in ENV.items()}
+
+VARIANTS = [(False, False), (False, True), (True, False), (True, True)]
+
+
+def leaves():
+    return E.var("a", (T * D, D)), E.var("b", (T, D))
+
+
+def ref_scan(av, bv, reverse=False, transposed=False) -> np.ndarray:
+    """Per-step numpy oracle: s_t = s_{t∓1} · A_t(ᵀ) + b_t."""
+    t_rows, d = np.asarray(bv).shape
+    blocks = np.asarray(av, np.float64).reshape(t_rows, d, d)
+    s = np.zeros(d)
+    out = np.zeros((t_rows, d))
+    order = range(t_rows) if not reverse else range(t_rows - 1, -1, -1)
+    for t in order:
+        blk = blocks[t].T if transposed else blocks[t]
+        s = s @ blk + np.asarray(bv, np.float64)[t]
+        out[t] = s
+    return out
+
+
+class TestForward:
+    @pytest.mark.parametrize("reverse,transposed", VARIANTS)
+    def test_dense_matches_oracle(self, reverse, transposed):
+        a, b = leaves()
+        out, = dense.evaluate(
+            [E.mat_recurrence(a, b, reverse=reverse, transposed=transposed)],
+            JENV)
+        np.testing.assert_allclose(np.asarray(out),
+                                   ref_scan(AV, BV, reverse, transposed),
+                                   atol=1e-5)
+
+    @pytest.mark.parametrize("reverse,transposed", VARIANTS)
+    def test_all_engines_agree(self, reverse, transposed):
+        a, b = leaves()
+        roots = [E.mat_recurrence(a, b, reverse=reverse,
+                                  transposed=transposed)]
+        ref = ref_scan(AV, BV, reverse, transposed)
+        d_out, = Engine("dense").eval_fn(roots)(JENV)
+        r_out, = Engine("relational").eval_fn(roots)(JENV)
+        np.testing.assert_allclose(np.asarray(d_out), ref, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(r_out), ref, atol=1e-5)
+        with SQLEngine(plan_cache_=False) as eng:
+            s_out, = eng.evaluate(roots, ENV)
+        np.testing.assert_allclose(s_out, ref, atol=1e-5)
+        with SQLEngine(dialect="array", plan_cache_=False) as eng:
+            ar_out, = eng.evaluate(roots, ENV)
+        np.testing.assert_allclose(ar_out, ref, atol=1e-5)
+
+    def test_sql92_rendering_executes_verbatim(self):
+        """The scan CTE references only the leaf tables — no series, no
+        UDFs — so the golden sql92 dialect text runs on a bare connection
+        (the paper's portable-SQL claim at scan granularity), and it is a
+        genuine recursive CTE (one tuple per step carrying the state
+        row)."""
+        a, b = leaves()
+        sql = sqlgen.to_sql([E.mat_recurrence(a, b, name="ms")],
+                            dialect="sql92")
+        assert sql.startswith("with recursive")
+        assert f"ms_scan(t, {', '.join(f's{j}' for j in range(1, D + 1))})" \
+            in sql
+        conn = sqlite3.connect(":memory:")
+        for nm, m in (("a", AV), ("b", BV)):
+            conn.execute(f"create table {nm} (i integer, j integer, v real)")
+            conn.executemany(
+                f"insert into {nm} values (?,?,?)",
+                [(i + 1, j + 1, float(m[i, j]))
+                 for i in range(m.shape[0]) for j in range(m.shape[1])])
+        out = np.zeros((T, D))
+        for i, j, v in conn.execute(sql.rstrip(";")).fetchall():
+            out[int(i) - 1, int(j) - 1] = v
+        np.testing.assert_allclose(out, ref_scan(AV, BV), atol=1e-5)
+
+    def test_diagonal_blocks_reproduce_elementwise_recurrence(self):
+        """LRU/S5 diagonal fast path: a stack of diagonal blocks computes
+        exactly the elementwise Recurrence over the diagonals."""
+        diag = (RNG.rand(T, D) * 0.8).astype(np.float32)
+        stack = np.zeros((T * D, D), np.float32)
+        for t in range(T):
+            stack[t * D:(t + 1) * D] = np.diag(diag[t])
+        a, b = leaves()
+        mat, = dense.evaluate([E.mat_recurrence(a, b)],
+                              {"a": jnp.asarray(stack), "b": JENV["b"]})
+        elem, = dense.evaluate(
+            [E.recurrence(E.var("d", (T, D)), E.var("b", (T, D)))],
+            {"d": jnp.asarray(diag), "b": JENV["b"]})
+        np.testing.assert_allclose(np.asarray(mat), np.asarray(elem),
+                                   atol=1e-5)
+
+    def test_step_outer_all_engines(self):
+        x = E.var("b", (T, D))            # reuse the (T, D) leaves
+        y = E.var("b2", (T, 2))
+        yv = RNG.randn(T, 2).astype(np.float32)
+        env = {"b": BV, "b2": yv}
+        ref = (BV.astype(np.float64)[:, :, None]
+               * yv.astype(np.float64)[:, None, :]).reshape(T * D, 2)
+        out, = dense.evaluate([E.step_outer(x, y)],
+                              {k: jnp.asarray(v) for k, v in env.items()})
+        np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+        with SQLEngine(plan_cache_=False) as eng:
+            s, = eng.evaluate([E.step_outer(x, y)], env)
+        np.testing.assert_allclose(s, ref, atol=1e-5)
+        with SQLEngine(dialect="array", plan_cache_=False) as eng:
+            ar, = eng.evaluate([E.step_outer(x, y)], env)
+        np.testing.assert_allclose(ar, ref, atol=1e-5)
+
+
+class TestAutodiff:
+    @pytest.mark.parametrize("reverse,transposed", VARIANTS)
+    def test_gradients_match_jax_oracle(self, reverse, transposed):
+        a, b = leaves()
+        loss = E.square(E.mat_recurrence(a, b, reverse=reverse,
+                                         transposed=transposed))
+        g = gradients(loss, [a, b])
+        ours = [np.asarray(o)
+                for o in dense.evaluate([g[a], g[b]], JENV)]
+
+        def f(av, bv):
+            out, = dense.evaluate([loss], {"a": av, "b": bv})
+            return jnp.sum(out)
+
+        oa, ob = jax.grad(f, argnums=(0, 1))(JENV["a"], JENV["b"])
+        np.testing.assert_allclose(ours[0], np.asarray(oa), atol=TOL)
+        np.testing.assert_allclose(ours[1], np.asarray(ob), atol=TOL)
+
+    @pytest.mark.parametrize("reverse,transposed", VARIANTS)
+    def test_gradient_dags_execute_in_both_representations(self, reverse,
+                                                           transposed):
+        a, b = leaves()
+        loss = E.square(E.mat_recurrence(a, b, reverse=reverse,
+                                         transposed=transposed))
+        g = gradients(loss, [a, b])
+        roots = [loss, g[a], g[b]]
+        ref = [np.asarray(o) for o in dense.evaluate(roots, JENV)]
+        with SQLEngine(plan_cache_=False) as eng:
+            got_rel = eng.evaluate(roots, ENV)
+        with SQLEngine(dialect="array", plan_cache_=False) as eng:
+            got_arr = eng.evaluate(roots, ENV)
+        for r, s, ar in zip(ref, got_rel, got_arr):
+            np.testing.assert_allclose(s, r, atol=TOL)
+            np.testing.assert_allclose(ar, r, atol=TOL)
+
+    def test_composes_with_surrounding_graph(self):
+        """The scan inside a larger DAG (projections either side), grads
+        flowing to every leaf."""
+        a, b = leaves()
+        w = E.var("w", (D, 2))
+        wv = RNG.randn(D, 2).astype(np.float32) * 0.5
+        env = dict(ENV, w=wv)
+        jenv = {k: jnp.asarray(v) for k, v in env.items()}
+        loss = E.square(E.matmul(E.mat_recurrence(a, b), w))
+        g = gradients(loss, [a, b, w])
+
+        def f(av, bv, wv_):
+            out, = dense.evaluate([loss], {"a": av, "b": bv, "w": wv_})
+            return jnp.sum(out)
+
+        oracle = jax.grad(f, argnums=(0, 1, 2))(
+            jenv["a"], jenv["b"], jenv["w"])
+        roots = [g[a], g[b], g[w]]
+        ours = dense.evaluate(roots, jenv)
+        for o, j in zip(ours, oracle):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(j),
+                                       atol=TOL)
+        with SQLEngine(plan_cache_=False) as eng:
+            got = eng.evaluate(roots, env)
+        for s, j in zip(got, oracle):
+            np.testing.assert_allclose(s, np.asarray(j), atol=TOL)
+
+
+class TestConstructorsAndPlans:
+    def test_shape_validation(self):
+        a, b = leaves()
+        with pytest.raises(ValueError):
+            E.mat_recurrence(E.var("bad", (T * D + 1, D)), b)
+        with pytest.raises(ValueError):
+            E.mat_recurrence(E.var("bad", (T * D, D + 1)), b)
+        with pytest.raises(ValueError):
+            E.step_outer(E.var("x", (T, D)), E.var("y", (T + 1, D)))
+        assert E.mat_recurrence(a, b).shape == (T, D)
+        assert E.step_outer(b, b).shape == (T * D, D)
+
+    def test_static_attributes_key_distinct_plans(self):
+        a, b = leaves()
+        sig = lambda **kw: sqlgen.dag_signature([E.mat_recurrence(a, b, **kw)])
+        assert sig() != sig(reverse=True)
+        assert sig() != sig(transposed=True)
+        assert sig(reverse=True) != sig(reverse=True, transposed=True)
+        assert sig() == sig()                     # twins still share
+
+    def test_auto_named_scan_renders_deterministically(self):
+        """Session-portability: two structural twins render to identical
+        SQL despite different auto-name counter states."""
+        def build():
+            a, b = leaves()
+            return [E.mat_recurrence(a, b)]
+        r1 = build()
+        for _ in range(5):
+            E.const(0.0, (1, 1))                  # shift the counter
+        r2 = build()
+        for d in ("sqlite", "array"):
+            assert sqlgen.to_sql(r1, dialect=d) == sqlgen.to_sql(r2, dialect=d)
+
+
+@pytest.mark.skipif(not HAVE_DUCKDB, reason="duckdb not installed")
+class TestDuckDB:
+    """The CI duckdb-extras differential: scans in both representations on
+    a real duckdb connection — the array Recurrence/MatRecurrence with no
+    Python aggregate (native group_concat + the mrowcat scalar)."""
+
+    @pytest.mark.parametrize("dialect", [None, "array"])
+    def test_mat_recurrence_fwd_bwd(self, dialect):
+        a, b = leaves()
+        loss = E.square(E.mat_recurrence(a, b))
+        g = gradients(loss, [a, b])
+        roots = [loss, g[a], g[b]]
+        ref = [np.asarray(o) for o in dense.evaluate(roots, JENV)]
+        with SQLEngine(backend="duckdb", dialect=dialect,
+                       plan_cache_=False) as eng:
+            got = eng.evaluate(roots, ENV)
+        for r, s in zip(ref, got):
+            np.testing.assert_allclose(s, r, atol=TOL)
+
+    def test_elementwise_recurrence_array_dialect(self):
+        """The previously sqlite-only array-dialect scan (ROADMAP item):
+        Recurrence through the array dialect on duckdb."""
+        a = E.var("a", (T, D))
+        b = E.var("b", (T, D))
+        env = {"a": (RNG.rand(T, D) * 0.5).astype(np.float32), "b": BV}
+        roots = [E.recurrence(a, b), E.recurrence(a, b, reverse=True)]
+        ref = [np.asarray(o) for o in dense.evaluate(
+            roots, {k: jnp.asarray(v) for k, v in env.items()})]
+        with SQLEngine(backend="duckdb", dialect="array",
+                       plan_cache_=False) as eng:
+            got = eng.evaluate(roots, env)
+        for r, s in zip(ref, got):
+            np.testing.assert_allclose(s, r, atol=TOL)

@@ -228,6 +228,124 @@ class TestPlanCacheStore:
             pc.dag_sql(roots, d, tail="sideways")
 
 
+class TestLRUCap:
+    """The eviction satellite: an uncapped cache grows without bound under
+    topology-churning workloads (per-(T, D) scan plans).  Both layers hold
+    an LRU cap; the hottest keys survive insert pressure."""
+
+    def test_mem_layer_holds_cap_and_keeps_hot_keys(self):
+        cap = 8
+        pc = PlanCache(path=None, cap=cap)
+        for k in range(cap):
+            pc.put(f"k{k}", f"select {k};")
+        hot = ["k0", "k1", "k2"]
+        for k in hot:                     # touch → most-recently-used
+            assert pc.get(k) is not None
+        for k in range(cap, cap + 5):     # 5 over cap: evict 5 coldest
+            pc.put(f"k{k}", f"select {k};")
+        assert len(pc) == cap
+        for k in hot:
+            assert pc.get(k) == f"select {k[1:]};", f"hot {k} evicted"
+        # k3..k7 were the least recently used — all gone
+        assert all(pc.get(f"k{k}") is None for k in range(3, 8))
+
+    def test_persistent_layer_pruned_on_insert(self, tmp_path):
+        p = str(tmp_path / "plans.db")
+        cap = 6
+        pc = PlanCache(path=p, cap=cap)
+        for k in range(cap + 10):
+            pc.put(f"k{k}", "select 1;")
+        assert len(pc) == cap             # len counts the persistent table
+        pc.close()
+        pc2 = PlanCache(path=p, cap=cap)  # a later session sees cap entries
+        assert pc2.stats["entries"] == cap
+        assert pc2.get(f"k{cap + 9}") is not None   # newest survived
+        assert pc2.get("k0") is None                # oldest pruned
+        pc2.close()
+
+    def test_hot_key_survives_persistent_pruning(self, tmp_path):
+        p = str(tmp_path / "plans.db")
+        cap = 4
+        pc = PlanCache(path=p, cap=cap)
+        pc.put("hot", "select 'hot';")
+        for k in range(cap + 6):          # keep touching the hot key
+            pc.put(f"k{k}", "select 1;")
+            assert pc.get("hot") is not None
+        pc.close()
+        pc2 = PlanCache(path=p, cap=cap)
+        assert pc2.get("hot") == "select 'hot';"
+        pc2.close()
+
+    def test_cap_env_override_and_default(self, monkeypatch):
+        assert PlanCache(path=None).cap == 512
+        monkeypatch.setenv("REPRO_PLAN_CACHE_CAP", "17")
+        assert PlanCache(path=None).cap == 17
+        assert PlanCache(path=None, cap=3).cap == 3   # arg beats env
+        # cache trouble never breaks the backend — malformed env included
+        monkeypatch.setenv("REPRO_PLAN_CACHE_CAP", "lots")
+        assert PlanCache(path=None).cap == 512
+
+    def test_memory_only_mode_does_not_accumulate_touches(self):
+        """Regression: with no persistent store there is no flush, so hit
+        keys must not pile up in the pending-touch set forever."""
+        pc = PlanCache(path=None, cap=2)
+        for k in range(50):
+            pc.put(f"k{k}", "select 1;")
+            pc.get(f"k{k}")
+        assert len(pc._touched) == 0 and len(pc) == 2
+
+    def test_new_plan_survives_prune_when_working_set_is_hot(self, tmp_path):
+        """Regression: put() must stamp the insert AFTER flushing hit
+        recency — at cap with every resident key just hit, the new plan
+        itself would otherwise be the prune victim (and every future
+        session would re-render it)."""
+        p = str(tmp_path / "plans.db")
+        pc = PlanCache(path=p, cap=2)
+        pc.put("k0", "select 0;")
+        pc.put("k1", "select 1;")
+        assert pc.get("k0") and pc.get("k1")    # whole store hot
+        pc.put("k2", "select 2;")
+        pc.close()
+        pc2 = PlanCache(path=p, cap=2)
+        assert pc2.get("k2") == "select 2;"     # newest survived the prune
+        pc2.close()
+
+    def test_pre_lru_store_migrates_in_place(self, tmp_path):
+        """Stores persisted before the cap (no last_used column) open
+        cleanly and keep serving their plans."""
+        import sqlite3 as sq
+        p = str(tmp_path / "plans.db")
+        conn = sq.connect(p)
+        conn.execute("create table plans (key text primary key,"
+                     " dialect text, sql text, created real)")
+        conn.execute("insert into plans values ('old', 'sqlite',"
+                     " 'select 9;', 1.0)")
+        conn.commit()
+        conn.close()
+        pc = PlanCache(path=p, cap=4)
+        assert pc.get("old") == "select 9;"
+        pc.put("new", "select 10;")
+        assert len(pc) == 2
+        pc.close()
+
+    def test_capped_engine_stays_correct_under_churn(self, tmp_path):
+        """End to end under the new scan workload: more distinct scan
+        topologies than the cap, every result still ≤1e-4 vs dense."""
+        pc = PlanCache(path=str(tmp_path / "plans.db"), cap=3)
+        eng = SQLEngine(plan_cache_=pc)
+        rng = np.random.RandomState(0)
+        for t in range(2, 8):             # 6 distinct Recurrence shapes
+            a, b = E.var("a", (t, 2)), E.var("b", (t, 2))
+            env = {"a": rng.rand(t, 2) * 0.5, "b": rng.randn(t, 2)}
+            out, = eng.evaluate([E.recurrence(a, b)], env)
+            s = np.zeros(2)
+            for i in range(t):
+                s = env["a"][i] * s + env["b"][i]
+            np.testing.assert_allclose(out[-1], s, atol=TOL)
+        assert len(pc) == 3
+        eng.close()
+
+
 class TestCachedDifferential:
     def env(self, g):
         w0 = {k: np.asarray(v) for k, v in nn2sql.init_weights(g.spec).items()}

@@ -1,0 +1,185 @@
+"""Edge-case differentials frozen as regressions (previously untested).
+
+Each case pins behaviour that all backends agree on *today* across the
+four dialect/engine combinations runnable in-container — dense,
+rel_engine, relational SQL (sqlite) and array SQL — plus the sql92
+renderings where they execute on a bare connection, and duckdb variants
+in the CI extras job:
+
+* ``ArgTopK`` ties exactly at the k boundary (smaller j wins — the
+  shared ``order by v desc, j asc`` rank);
+* ``Scatter`` duplicate-index accumulation (collisions SUM; untouched
+  frame rows stay zero);
+* 0-row matrices through the full pivot / ingest / decode path;
+* ``Softmax`` at ±750 — naive exp overflows f64 at ~709, the stable
+  lowering (subtract the row max) must not produce inf/nan and must
+  match the dense reference.
+"""
+import sqlite3
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Engine, dense
+from repro.core import expr as E
+from repro.db import HAVE_DUCKDB, connect, relation_io
+from repro.db.dialect import Sql92Dialect, json_to_matrix, matrix_to_json
+from repro.db.sql_engine import SQLEngine
+
+TOL = 1e-5
+
+#: (label, dialect override) pairs; duckdb variants appended in CI
+ENGINES = [("sqlite-relational", "sqlite", None),
+           ("sqlite-array", "sqlite", "array")]
+if HAVE_DUCKDB:
+    ENGINES += [("duckdb-relational", "duckdb", None),
+                ("duckdb-array", "duckdb", "array")]
+
+
+def sql_engines():
+    return [pytest.param(backend, dialect, id=label)
+            for label, backend, dialect in ENGINES]
+
+
+def all_backends(roots, env):
+    """Evaluate ``roots`` on dense, rel_engine and every SQL combination;
+    returns {label: [np.ndarray per root]}."""
+    jenv = {k: jnp.asarray(v, jnp.float32) for k, v in env.items()}
+    outs = {"dense": [np.asarray(o)
+                      for o in Engine("dense").eval_fn(roots)(jenv)],
+            "rel_engine": [np.asarray(o)
+                           for o in Engine("relational").eval_fn(roots)(jenv)]}
+    for label, backend, dialect in ENGINES:
+        with SQLEngine(backend=backend, dialect=dialect,
+                       plan_cache_=False) as eng:
+            outs[label] = eng.evaluate(roots, env)
+    return outs
+
+
+class TestArgTopKBoundaryTies:
+    # row 0: tie 3.0/3.0 exactly AT the k=2 boundary (j=1 beats j=2);
+    # row 1: three-way tie at the boundary; row 2: all equal
+    X = np.array([[1.0, 3.0, 3.0, 0.0],
+                  [5.0, 2.0, 2.0, 2.0],
+                  [7.0, 7.0, 7.0, 7.0]], np.float32)
+    WANT_K2 = np.array([[0, 1, 1, 0],
+                        [1, 1, 0, 0],
+                        [1, 1, 0, 0]], np.float64)
+
+    def test_all_backends_pin_smaller_j(self):
+        x = E.var("x", self.X.shape)
+        for label, got in all_backends([E.argtopk(x, 2)],
+                                       {"x": self.X}).items():
+            np.testing.assert_array_equal(
+                got[0], self.WANT_K2, err_msg=f"{label} tie-break drifted")
+
+    def test_sql92_correlated_rendering_agrees(self):
+        """The window-free sql92 rank executes on a bare connection and
+        pins the same boundary ties."""
+        conn = sqlite3.connect(":memory:")
+        conn.execute("create table m (i integer, j integer, v real)")
+        conn.executemany("insert into m values (?,?,?)",
+                         [(i + 1, j + 1, float(self.X[i, j]))
+                          for i in range(3) for j in range(4)])
+        out = np.zeros_like(self.WANT_K2)
+        q = Sql92Dialect().topk_mask_select("m", 2)
+        for i, j, v in conn.execute(q).fetchall():
+            out[int(i) - 1, int(j) - 1] = v
+        np.testing.assert_array_equal(out, self.WANT_K2)
+
+
+class TestScatterDuplicateIndices:
+    X = np.array([[1.0, 10.0], [2.0, 20.0], [4.0, 40.0],
+                  [8.0, 80.0], [16.0, 160.0]], np.float32)
+    IDX = np.array([[0.0], [2.0], [0.0], [2.0], [2.0]], np.float32)
+    # rows 0 and 2 collect their collision sums, rows 1 and 3 stay zero
+    WANT = np.array([[5.0, 50.0], [0.0, 0.0],
+                     [26.0, 260.0], [0.0, 0.0]], np.float64)
+
+    def test_collisions_accumulate_holes_stay_zero(self):
+        x = E.var("x", self.X.shape)
+        idx = E.var("idx", self.IDX.shape)
+        roots = [E.scatter(x, idx, 4)]
+        env = {"x": self.X, "idx": self.IDX}
+        for label, got in all_backends(roots, env).items():
+            np.testing.assert_allclose(
+                got[0], self.WANT, atol=TOL,
+                err_msg=f"{label} scatter accumulation drifted")
+
+
+class TestZeroRowMatrices:
+    def test_pivot_roundtrip(self):
+        a = np.zeros((0, 3))
+        i, j, v = relation_io.matrix_to_columns(a)
+        assert i.size == j.size == v.size == 0
+        np.testing.assert_array_equal(
+            relation_io.rows_to_matrix([], (0, 3)), a)
+        assert json_to_matrix(matrix_to_json(a)).shape == (0, 3)
+
+    def test_db_write_read_empty(self):
+        with connect("sqlite") as ad:
+            relation_io.write_matrix(ad, "empty", np.zeros((0, 4)))
+            out = relation_io.read_matrix(ad, "empty", (0, 4))
+            assert out.shape == (0, 4)
+            relation_io.write_matrix_array(ad, "empty_a", np.zeros((0, 4)))
+            assert relation_io.read_matrix_array(ad, "empty_a").shape == (0, 4)
+
+    def test_full_graph_path(self):
+        """A 0-row batch through matmul / gather / scatter: every backend
+        returns the right-shaped empties, the scatter frame stays dense."""
+        x = E.var("x", (0, 3))
+        w = E.var("w", (3, 2))
+        eidx = E.var("eidx", (0, 1))
+        wv = np.arange(6, dtype=np.float32).reshape(3, 2)
+        env = {"x": np.zeros((0, 3), np.float32), "w": wv,
+               "eidx": np.zeros((0, 1), np.float32)}
+        roots = [E.matmul(x, w),                       # (0, 2)
+                 E.gather(E.var("w", (3, 2)), eidx),   # (0, 2)
+                 E.scatter(x, eidx, 4)]                # (4, 3), all zero
+        for label, got in all_backends(roots, env).items():
+            assert got[0].shape == (0, 2), label
+            assert got[1].shape == (0, 2), label
+            np.testing.assert_array_equal(got[2],
+                                          np.zeros((4, 3)), err_msg=label)
+
+
+class TestSoftmaxOverflow:
+    # exp(750) overflows float64 (max ~709); exp(-1500) underflows to 0
+    X = np.array([[750.0, 749.0, -750.0],
+                  [-750.0, -749.5, -748.0],
+                  [750.0, 750.0, 0.0]], np.float32)
+
+    @staticmethod
+    def stable_ref(x):
+        x = np.asarray(x, np.float64)
+        e = np.exp(x - x.max(axis=1, keepdims=True))
+        return e / e.sum(axis=1, keepdims=True)
+
+    def test_no_overflow_and_all_backends_agree(self):
+        want = self.stable_ref(self.X)
+        x = E.var("x", self.X.shape)
+        for label, got in all_backends([E.softmax(x)],
+                                       {"x": self.X}).items():
+            assert np.isfinite(got[0]).all(), f"{label} overflowed"
+            np.testing.assert_allclose(got[0], want, atol=TOL,
+                                       err_msg=f"{label} softmax drifted")
+
+    def test_sql92_rendering_is_stable(self):
+        """The golden sql92 softmax CTE (executed with a registered exp
+        UDF) subtracts the row max — ±750 inputs stay finite."""
+        from repro.core import sqlgen
+        import math
+
+        conn = sqlite3.connect(":memory:")
+        conn.create_function("exp", 1, math.exp, deterministic=True)
+        conn.execute("create table x (i integer, j integer, v real)")
+        conn.executemany("insert into x values (?,?,?)",
+                         [(i + 1, j + 1, float(self.X[i, j]))
+                          for i in range(3) for j in range(3)])
+        sql = sqlgen.to_sql([E.softmax(E.var("x", self.X.shape),
+                                       name="sm")], dialect="sql92")
+        out = np.zeros((3, 3))
+        for i, j, v in conn.execute(sql.rstrip(";")).fetchall():
+            out[int(i) - 1, int(j) - 1] = v
+        np.testing.assert_allclose(out, self.stable_ref(self.X), atol=TOL)

@@ -35,6 +35,7 @@ try:
     from common import timeit            # script mode (CI invocation)
 except ImportError:  # pragma: no cover - package mode
     from .common import timeit
+from repro import obs
 from repro.core import Engine, nn2sql
 from repro.core import expr as E
 from repro.core.autodiff import gradients
@@ -151,14 +152,19 @@ def main():
         if args.backend == "auto" else args.backend
 
     print(f"== relational vs array representation, backend={backend} ==")
-    results = bench_mlp(args, backend) + [bench_moe(args, backend),
-                                          bench_rwkv(args, backend)]
+    tracer = obs.Tracer()
+    with obs.use(tracer):
+        results = bench_mlp(args, backend) + [bench_moe(args, backend),
+                                              bench_rwkv(args, backend)]
     for r in results:
         print(f"{r['workload']:>18}: relational {r['relational_s']*1e3:9.1f}"
               f" ms | array {r['array_s']*1e3:9.1f} ms | "
               f"array speedup {r['speedup_array']:6.1f}x | max err "
               f"{max(r['relational_max_err'], r['array_max_err']):.2e}",
               flush=True)
+    trace_path = obs.write_chrome_trace(
+        tracer, args.out.rsplit(".", 1)[0] + ".trace.json")
+    print(f"perfetto trace -> {trace_path}", flush=True)
 
     by_name = {r["workload"]: r for r in results}
     checks = {
@@ -173,7 +179,11 @@ def main():
     report = {"backend": backend, "have_duckdb": HAVE_DUCKDB,
               "mlp_config": {"rows": args.rows, "features": args.features,
                              "hidden": args.hidden, "classes": args.classes},
-              "results": results, "checks": checks}
+              "results": results,
+              "trace": {"stage_totals": obs.summarize(tracer, top=12),
+                        "evaluate": obs.stage_breakdown(
+                            tracer, root="sql.evaluate")},
+              "checks": checks}
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"wrote {args.out}\nchecks: {checks}")

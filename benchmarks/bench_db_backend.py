@@ -9,6 +9,9 @@ N-iteration training loop of the Section-2.2 MLP:
                     recursive-CTE training query + stepped Listing-7
 
 Run:  PYTHONPATH=src python benchmarks/bench_db_backend.py [--rows 60]
+(``--trace-out t.json`` additionally captures the in-DB runs with the
+``repro.obs`` tracer: prints the per-stage breakdown and writes a
+Perfetto-loadable Chrome trace.)
 """
 import argparse
 import time
@@ -17,6 +20,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import Engine, nn2sql, sgd_step_fn
 from repro.db import HAVE_DUCKDB
 from repro.db.train import train_in_db
@@ -37,6 +41,9 @@ def main():
     ap.add_argument("--rows", type=int, default=60)
     ap.add_argument("--hidden", type=int, default=10)
     ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--trace-out", default=None,
+                    help="capture the in-DB runs with the repro.obs tracer "
+                         "and write a Chrome/Perfetto trace here")
     args = ap.parse_args()
 
     spec = nn2sql.MLPSpec(n_rows=args.rows, n_features=4,
@@ -93,6 +100,19 @@ def main():
     print(f"{'benchmark':46s} {'median ms':>10s}")
     for name, t in rows:
         print(f"{name:46s} {t * 1e3:10.2f}")
+
+    if args.trace_out:
+        tracer = obs.Tracer()
+        with obs.use(tracer):
+            train_in_db(g, w0, x, y, args.iters)
+        bd = obs.stage_breakdown(tracer, root="train.in_db")
+        print(f"\ntraced train.in_db: {bd['wall_s'] * 1e3:.1f} ms wall, "
+              f"{bd['attribution']:.1%} attributed")
+        for stage, d in bd["stages"].items():
+            print(f"  {stage:<22s} {d['pct_of_root']:5.1f}% "
+                  f"({d['total_s'] * 1e3:.2f} ms)")
+        obs.write_chrome_trace(tracer, args.trace_out)
+        print(f"perfetto trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

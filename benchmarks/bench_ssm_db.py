@@ -34,6 +34,7 @@ try:
     from common import timeit            # script mode (CI invocation)
 except ImportError:  # pragma: no cover - package mode
     from .common import timeit
+from repro import obs
 from repro.db import HAVE_DUCKDB, zoo
 from repro.db.sql_engine import SQLEngine
 from repro.nn import ssm
@@ -184,25 +185,33 @@ def main():
         if args.backend == "auto" else args.backend
 
     print(f"== SSM-in-SQL smoke, backend={backend} ==")
-    ssd = bench_ssd(args, backend)
-    print(f"ssd scan:  lax {ssd['lax_scan_s']*1e3:8.1f} ms | rel "
-          f"{ssd['relational_s']*1e3:8.1f} ms | array "
-          f"{ssd['array_s']*1e3:8.1f} ms | max err "
-          f"{max(ssd['relational_max_err'], ssd['array_max_err']):.2e}",
-          flush=True)
-    lru = bench_lru(args, backend)
-    print(f"lru layer: lax {lru['lax_scan_s']*1e3:8.1f} ms | rel "
-          f"{lru['relational_s']*1e3:8.1f} ms | array "
-          f"{lru['array_s']*1e3:8.1f} ms | max err {lru['max_err']:.2e}",
-          flush=True)
-    curve = bench_curve(args, backend)
-    for pt in curve:
-        print(f"  curve N={pt['state']:3d} ({pt['state_cols']:4d} cols): "
-              f"rel {pt['relational_s']*1e3:8.1f} ms | array "
-              f"{pt['array_s']*1e3:8.1f} ms", flush=True)
+    tracer = obs.Tracer()
+    with obs.use(tracer):
+        ssd = bench_ssd(args, backend)
+        print(f"ssd scan:  lax {ssd['lax_scan_s']*1e3:8.1f} ms | rel "
+              f"{ssd['relational_s']*1e3:8.1f} ms | array "
+              f"{ssd['array_s']*1e3:8.1f} ms | max err "
+              f"{max(ssd['relational_max_err'], ssd['array_max_err']):.2e}",
+              flush=True)
+        lru = bench_lru(args, backend)
+        print(f"lru layer: lax {lru['lax_scan_s']*1e3:8.1f} ms | rel "
+              f"{lru['relational_s']*1e3:8.1f} ms | array "
+              f"{lru['array_s']*1e3:8.1f} ms | max err {lru['max_err']:.2e}",
+              flush=True)
+        curve = bench_curve(args, backend)
+        for pt in curve:
+            print(f"  curve N={pt['state']:3d} ({pt['state_cols']:4d} cols): "
+                  f"rel {pt['relational_s']*1e3:8.1f} ms | array "
+                  f"{pt['array_s']*1e3:8.1f} ms", flush=True)
+    trace_path = obs.write_chrome_trace(
+        tracer, args.out.rsplit(".", 1)[0] + ".trace.json")
+    print(f"perfetto trace -> {trace_path}", flush=True)
 
     report = {"backend": backend, "have_duckdb": HAVE_DUCKDB,
               "ssd": ssd, "lru": lru, "curve": curve,
+              "trace": {"stage_totals": obs.summarize(tracer, top=12),
+                        "scan_chunks": obs.stage_breakdown(
+                            tracer, root="zoo.ssd_scan")},
               "checks": {"ssd_within_1e-4": ssd["within_tol"],
                          "lru_within_1e-4": lru["within_tol"]}}
     with open(args.out, "w") as f:

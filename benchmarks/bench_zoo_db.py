@@ -32,6 +32,7 @@ try:
     from common import timeit            # script mode (CI invocation)
 except ImportError:  # pragma: no cover - package mode
     from .common import timeit
+from repro import obs
 from repro.db import HAVE_DUCKDB, zoo
 from repro.db.sql_engine import SQLEngine
 from repro.kernels import ref
@@ -157,17 +158,24 @@ def main():
         if args.backend == "auto" else args.backend
 
     print(f"== DAG-zoo-in-SQL smoke, backend={backend} ==")
-    moe = bench_moe(args, backend)
-    print(f"moe layer: jax {moe['layer_jax_s']*1e3:8.1f} ms | sql "
-          f"{moe['layer_sql_s']*1e3:8.1f} ms | max err "
-          f"{moe['layer_max_err']:.2e}", flush=True)
-    rwkv = bench_rwkv(args, backend)
-    print(f"rwkv scan: jax {rwkv['time_mix_jax_s']*1e3:8.1f} ms | sql "
-          f"{rwkv['time_mix_sql_s']*1e3:8.1f} ms | max err "
-          f"{rwkv['o_max_err']:.2e}", flush=True)
+    tracer = obs.Tracer()
+    with obs.use(tracer):
+        moe = bench_moe(args, backend)
+        print(f"moe layer: jax {moe['layer_jax_s']*1e3:8.1f} ms | sql "
+              f"{moe['layer_sql_s']*1e3:8.1f} ms | max err "
+              f"{moe['layer_max_err']:.2e}", flush=True)
+        rwkv = bench_rwkv(args, backend)
+        print(f"rwkv scan: jax {rwkv['time_mix_jax_s']*1e3:8.1f} ms | sql "
+              f"{rwkv['time_mix_sql_s']*1e3:8.1f} ms | max err "
+              f"{rwkv['o_max_err']:.2e}", flush=True)
+    trace_path = obs.write_chrome_trace(
+        tracer, args.out.rsplit(".", 1)[0] + ".trace.json")
+    print(f"perfetto trace -> {trace_path}", flush=True)
 
     report = {"backend": backend, "have_duckdb": HAVE_DUCKDB,
               "moe": moe, "rwkv": rwkv,
+              "trace": {"stage_totals": obs.summarize(tracer, top=12),
+                        "zoo_layers": obs.stage_breakdown(tracer)},
               "checks": {"moe_within_1e-4": moe["within_tol"],
                          "rwkv_within_1e-4": rwkv["within_tol"]}}
     with open(args.out, "w") as f:

@@ -1,0 +1,86 @@
+"""Trace an in-database training run — and query the trace *with SQL*.
+
+The observability loop closed on itself: a :class:`repro.obs.Tracer`
+collects nested spans from every layer of the execution stack (leaf
+ingestion, plan render + cache lookup, EXPLAIN capture, query execution,
+result decode), then the spans are written back into the very database
+that ran the workload as a ``trace_spans`` relation — so "which stage
+dominates a training step" is answered by the engine itself, with the
+same SQL surface that trained the model.
+
+Also shows ``SQLEngine.stats`` (plan-cache hit/miss/eviction counters —
+the LRU no longer evicts silently), the engine's EXPLAIN output for the
+cached plan, and the Chrome-trace export (load the JSON at
+https://ui.perfetto.dev).
+
+Run:  PYTHONPATH=src python examples/observe_in_db.py
+"""
+import numpy as np
+
+from repro import obs
+from repro.core import nn2sql
+from repro.db.adapter import connect
+from repro.db.plan_cache import PlanCache
+from repro.db.sql_engine import SQLEngine
+from repro.db.train import train_in_db
+
+spec = nn2sql.MLPSpec(n_rows=60, n_features=4, n_hidden=10, n_classes=3,
+                      lr=0.1)
+
+
+def iris_like(spec, seed=0):
+    rng = np.random.RandomState(seed)
+    centers = rng.rand(spec.n_classes, spec.n_features)
+    labels = rng.randint(0, spec.n_classes, spec.n_rows)
+    x = centers[labels] + 0.08 * rng.randn(spec.n_rows, spec.n_features)
+    return x.astype(np.float32), np.eye(spec.n_classes)[labels]
+
+
+def main():
+    graph = nn2sql.build_graph(spec)
+    weights = {k: np.asarray(v) for k, v in nn2sql.init_weights(spec).items()}
+    x, y = iris_like(spec)
+
+    tracer = obs.Tracer()
+    adapter = connect("sqlite")
+    cache = PlanCache(path=None)
+
+    # -- 1. trace a training run + a traced forward evaluation ---------------
+    with obs.use(tracer):
+        train_in_db(graph, weights, x, y, n_iters=10, adapter=adapter,
+                    plan_cache_=cache)
+    eng = SQLEngine(adapter=adapter, plan_cache_=cache, tracer=tracer)
+    eng.evaluate([graph.loss], {**weights, "img": x, "one_hot": y})
+    eng.evaluate([graph.loss], {**weights, "img": x, "one_hot": y})  # warm
+
+    # -- 2. the spans become a relation in the SAME database -----------------
+    n = obs.write_trace_spans(adapter, tracer)
+    print(f"wrote {n} spans into trace_spans — per-stage totals via SQL:\n")
+    print("    " + obs.STAGE_SQL.replace("\n", "\n    "), "\n")
+    for name, count, total_ms in adapter.execute(obs.STAGE_SQL):
+        print(f"  {name:<22s} n={int(count):<4d} {total_ms:9.3f} ms")
+
+    # -- 3. per-stage attribution of the training iteration ------------------
+    bd = obs.stage_breakdown(tracer, root="train.in_db")
+    print(f"\ntrain.in_db: {bd['wall_s'] * 1e3:.2f} ms wall, "
+          f"{bd['attribution']:.1%} attributed to named stages:")
+    for stage, d in bd["stages"].items():
+        print(f"  {stage:<22s} {d['pct_of_root']:5.1f}%")
+
+    # -- 4. merged counters + the engine's own plan for the cached query -----
+    st = eng.stats
+    print(f"\nSQLEngine.stats: cache {st['cache_hits']} hits / "
+          f"{st['cache_misses']} misses / {st['cache_evictions']} evictions; "
+          f"{st['queries']} queries, {st['ingest_bytes']} bytes ingested")
+    print("\nEXPLAIN QUERY PLAN of the cached forward query:")
+    for line in eng.explain([graph.loss]).splitlines()[:6]:
+        print("  " + line)
+
+    # -- 5. Perfetto-loadable export -----------------------------------------
+    path = obs.write_chrome_trace(tracer, "observe_in_db.trace.json")
+    print(f"\nChrome trace written to {path} (open in ui.perfetto.dev)")
+    eng.close()
+
+
+if __name__ == "__main__":
+    main()

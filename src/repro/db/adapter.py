@@ -30,12 +30,16 @@ Ingestion strategy per backend (the MNIST-scale bottleneck — see
 """
 from __future__ import annotations
 
+import logging
+import os
 import re
 import sqlite3
+import time
 from typing import Iterable, Sequence
 
 import numpy as np
 
+from ..obs import tracer_of
 from .dialect import (HAVE_DUCKDB, DuckDBDialect, Sql92Dialect, SqliteDialect,
                       duckdb)
 
@@ -43,6 +47,27 @@ _IDENT = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
 
 #: rows per executemany chunk (bounds peak Python-object materialisation)
 CHUNK_ROWS = 100_000
+
+#: queries slower than this many milliseconds are logged (rendered SQL head
+#: + span path) through the ``repro.db`` logger; unset/invalid → disabled
+SLOW_QUERY_ENV = "REPRO_SLOW_QUERY_MS"
+
+#: characters of rendered SQL attached to spans and slow-query log lines
+SQL_HEAD = 160
+
+log = logging.getLogger("repro.db")
+
+
+def _slow_threshold_s() -> float | None:
+    """Parse ``REPRO_SLOW_QUERY_MS`` (read per query so tests and running
+    processes can flip it); None disables the slow-query log."""
+    v = os.environ.get(SLOW_QUERY_ENV)
+    if not v:
+        return None
+    try:
+        return float(v) / 1e3
+    except ValueError:
+        return None
 
 
 def _check_ident(name: str) -> str:
@@ -75,19 +100,74 @@ class Adapter:
         #: ``execute`` writes are untracked: mutate matrix tables through
         #: the structured methods.)
         self.matrix_digests: dict[str, bytes] = {}
+        #: tracer override for this connection's spans (None → the
+        #: module-level active tracer, a no-op unless installed)
+        self.tracer = None
+        #: always-on cheap counters, merged into ``SQLEngine.stats``
+        self.counters: dict[str, int] = {
+            "queries": 0, "statements": 0, "rows_returned": 0,
+            "ingest_bytes": 0, "ingest_cells": 0, "slow_queries": 0,
+        }
         self.dialect.prepare(conn)
 
     # -- statement execution ------------------------------------------------
+    #
+    # EVERY statement the backend runs goes through ``execute`` /
+    # ``executemany`` (or the span-wrapped fast paths below), so span
+    # coverage and the query counters cannot be bypassed by new call sites
+    # — ``tests/test_obs_coverage.py`` statically enforces both halves.
+
+    def _finish_stmt(self, sql: str, dt: float, tracer) -> None:
+        """Shared statement epilogue: slow-query log (``REPRO_SLOW_QUERY_MS``)
+        with the rendered SQL head and the innermost span path."""
+        thr = _slow_threshold_s()
+        if thr is not None and dt >= thr:
+            self.counters["slow_queries"] += 1
+            head = " ".join(sql[:SQL_HEAD].split())
+            log.warning("slow query %.1f ms (>= %s ms) span=%s sql=%s",
+                        dt * 1e3, os.environ.get(SLOW_QUERY_ENV),
+                        tracer.current_path() or "<untraced>", head)
+
     def execute(self, sql: str, params: Sequence = ()) -> list[tuple]:
         """Run one statement, return all result rows (possibly empty)."""
-        cur = self.conn.execute(sql, tuple(params))
-        try:
-            return cur.fetchall()
-        except Exception:  # statement without a result set
-            return []
+        tr = tracer_of(self)
+        with tr.span("db.execute") as sp:
+            t0 = time.perf_counter()
+            cur = self.conn.execute(sql, tuple(params))
+            try:
+                rows = cur.fetchall()
+            except Exception:  # statement without a result set
+                rows = []
+            dt = time.perf_counter() - t0
+            self.counters["queries"] += 1
+            self.counters["rows_returned"] += len(rows)
+            if tr.enabled:
+                sp.set(sql=" ".join(sql[:SQL_HEAD].split()), rows=len(rows))
+            self._finish_stmt(sql, dt, tr)
+        return rows
 
     def executemany(self, sql: str, rows: Iterable[Sequence]) -> None:
-        self.conn.executemany(sql, rows)
+        tr = tracer_of(self)
+        with tr.span("db.executemany") as sp:
+            t0 = time.perf_counter()
+            self.conn.executemany(sql, rows)
+            dt = time.perf_counter() - t0
+            self.counters["statements"] += 1
+            if tr.enabled:
+                sp.set(sql=" ".join(sql[:SQL_HEAD].split()))
+            self._finish_stmt(sql, dt, tr)
+
+    # -- introspection ------------------------------------------------------
+    def explain_sql(self, sql: str) -> str:
+        """The engine's plan for ``sql`` as text ('' where unsupported) —
+        captured once per cached plan by ``SQLEngine`` and stored alongside
+        the plan-cache entry."""
+        return ""
+
+    def db_bytes(self) -> int | None:
+        """Stored size of the database in bytes (None where unknowable) —
+        the ``db_bytes`` delta attribute of evaluation spans."""
+        return None
 
     # -- schema / data ------------------------------------------------------
     def create_table(self, name: str, columns: Sequence[tuple[str, str]],
@@ -176,6 +256,7 @@ class SQLiteAdapter(Adapter):
         #: runtime engine version — instance-level so tests can pin it
         self.sqlite_version = sqlite3.sqlite_version_info
         try:  # table-valued JSON ingestion needs the (default) JSON1 ext.
+            # obs: exempt — capability probe at connect time, not a query
             self.conn.execute("select count(*) from json_each('[0]')")
             self.supports_json_ingest = True
         except sqlite3.Error:  # pragma: no cover - JSON1-less builds
@@ -188,6 +269,24 @@ class SQLiteAdapter(Adapter):
         keep the multi-row VALUES batching."""
         return (self.supports_json_ingest
                 and self.sqlite_version >= self.JSON_LINEAR_VERSION)
+
+    def explain_sql(self, sql: str) -> str:
+        """``EXPLAIN QUERY PLAN`` rows as ``id parent: detail`` lines."""
+        try:
+            rows = self.execute("explain query plan " + sql)
+        except Exception:
+            return ""
+        return "\n".join(f"{r[0]} {r[1]}: {r[-1]}" for r in rows)
+
+    def db_bytes(self) -> int | None:
+        try:
+            # obs: exempt — size probe read by the tracer itself; spanning
+            # it would pollute every evaluation trace with pragma queries
+            page_count, = self.conn.execute("pragma page_count").fetchone()
+            page_size, = self.conn.execute("pragma page_size").fetchone()
+            return int(page_count) * int(page_size)
+        except Exception:  # pragma: no cover - pragma-less builds
+            return None
 
     #: cells per bound JSON array.  sqlite ≤3.37 extracts json_each values
     #: in O(array length) per row — one giant array is quadratic; bounded
@@ -225,9 +324,12 @@ class SQLiteAdapter(Adapter):
         sql = (f"insert into {name} "
                f"select (key + ?) / {cols} + 1, key % {cols} + 1, value "
                f"from json_each(?)")
-        cur = self.conn.cursor()
-        for s in range(0, flat.size, chunk):
-            cur.execute(sql, (s, json.dumps(flat[s:s + chunk].tolist())))
+        tr = tracer_of(self)
+        with tr.span("db.ingest_json", table=name, cells=int(a.size)):
+            cur = self.conn.cursor()
+            for s in range(0, flat.size, chunk):
+                cur.execute(sql, (s, json.dumps(flat[s:s + chunk].tolist())))
+                self.counters["statements"] += 1
 
     def insert_columns(self, name: str,
                        cols: Sequence[np.ndarray]) -> None:
@@ -249,17 +351,22 @@ class SQLiteAdapter(Adapter):
         # column count (wider tables than {i,j,v} pass through here too)
         batch = max(1, min(self.ROWS_PER_STMT, 999 // k))
         full, rem = divmod(n, batch)
-        cur = self.conn.cursor()
-        if full:
-            stride = k * batch
-            sql = (f"insert into {name} values "
-                   + ", ".join([row_ph] * batch))
-            cur.executemany(sql, (flat[s:s + stride]
-                                  for s in range(0, full * stride, stride)))
-        if rem:
-            sql = (f"insert into {name} values "
-                   + ", ".join([row_ph] * rem))
-            cur.execute(sql, flat[full * batch * k:])
+        tr = tracer_of(self)
+        with tr.span("db.ingest_values", table=name, rows=n):
+            cur = self.conn.cursor()
+            if full:
+                stride = k * batch
+                sql = (f"insert into {name} values "
+                       + ", ".join([row_ph] * batch))
+                cur.executemany(sql, (flat[s:s + stride]
+                                      for s in range(0, full * stride,
+                                                     stride)))
+                self.counters["statements"] += 1
+            if rem:
+                sql = (f"insert into {name} values "
+                       + ", ".join([row_ph] * rem))
+                cur.execute(sql, flat[full * batch * k:])
+                self.counters["statements"] += 1
 
 
 class DuckDBAdapter(Adapter):
@@ -273,7 +380,16 @@ class DuckDBAdapter(Adapter):
         super().__init__(duckdb.connect(path))
 
     def executemany(self, sql, rows):  # pragma: no cover - needs duckdb
-        self.conn.executemany(sql, [tuple(r) for r in rows])
+        # tuple-normalise for duckdb's binder, then ride the traced base
+        Adapter.executemany(self, sql, [tuple(r) for r in rows])
+
+    def explain_sql(self, sql: str) -> str:  # pragma: no cover - needs duckdb
+        """duckdb spells it plain ``EXPLAIN`` (physical plan as text)."""
+        try:
+            rows = self.execute("explain " + sql)
+        except Exception:
+            return ""
+        return "\n".join(str(r[-1]) for r in rows)
 
     def insert_columns(self, name, cols):  # pragma: no cover - needs duckdb
         """Register the column arrays as a relation (Arrow when available,
@@ -298,11 +414,13 @@ class DuckDBAdapter(Adapter):
         if frame is None:  # no columnar frontend — generic chunked path
             Adapter.insert_columns(self, name, cols)
             return
-        self.conn.register(view, frame)
-        try:
-            self.conn.execute(f"insert into {name} select * from {view}")
-        finally:
-            self.conn.unregister(view)
+        tr = tracer_of(self)
+        with tr.span("db.ingest_register", table=name, rows=n):
+            self.conn.register(view, frame)
+            try:
+                self.execute(f"insert into {name} select * from {view}")
+            finally:
+                self.conn.unregister(view)
 
 
 def connect(backend: str = "sqlite", path: str = ":memory:") -> Adapter:

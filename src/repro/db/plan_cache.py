@@ -120,8 +120,16 @@ class PlanCache:
         self.path = path
         self.hits = 0
         self.misses = 0
+        #: entries dropped by the in-process LRU / the persistent prune —
+        #: eviction is no longer silent (surfaced via ``stats`` and merged
+        #: into ``SQLEngine.stats``)
+        self.evictions = 0
+        self.evictions_disk = 0
         self._mem: collections.OrderedDict[str, str] = collections.OrderedDict()
         self._touched: set[str] = set()   # hit recency pending disk flush
+        #: key → captured engine plan text (EXPLAIN QUERY PLAN / EXPLAIN),
+        #: stored alongside the rendered SQL; '' means capture unsupported
+        self._explains: dict[str, str] = {}
         self._conn = None
         if path:
             try:
@@ -130,13 +138,16 @@ class PlanCache:
                 self._conn.execute(
                     "create table if not exists plans ("
                     " key text primary key, dialect text, sql text,"
-                    " created real, last_used real)")
+                    " created real, last_used real, explain_text text)")
                 cols = [r[1] for r in self._conn.execute(
                     "pragma table_info(plans)")]
                 if "last_used" not in cols:  # pre-LRU store: migrate in place
                     self._conn.execute("alter table plans"
                                        " add column last_used real")
                     self._conn.execute("update plans set last_used = created")
+                if "explain_text" not in cols:  # pre-obs store: migrate
+                    self._conn.execute("alter table plans"
+                                       " add column explain_text text")
                 self._conn.commit()
             except Exception:  # pragma: no cover - env-dependent degradation
                 self._conn = None
@@ -146,7 +157,9 @@ class PlanCache:
         self._mem[key] = sql
         self._mem.move_to_end(key)
         while len(self._mem) > self.cap:
-            self._mem.popitem(last=False)
+            dropped, _ = self._mem.popitem(last=False)
+            self._explains.pop(dropped, None)
+            self.evictions += 1
 
     def _flush_touched(self) -> None:
         """Write the recency of keys touched since the last flush.  Hits
@@ -194,8 +207,10 @@ class PlanCache:
                 # evict the plan being inserted
                 now = time.time()
                 self._conn.execute(
-                    "insert or replace into plans values (?, ?, ?, ?, ?)",
-                    (key, dialect, sql, now, now))
+                    "insert or replace into plans"
+                    " (key, dialect, sql, created, last_used, explain_text)"
+                    " values (?, ?, ?, ?, ?, ?)",
+                    (key, dialect, sql, now, now, self._explains.get(key)))
                 n = self._conn.execute(
                     "select count(*) from plans").fetchone()[0]
                 if n > self.cap:  # prune the coldest down to the cap
@@ -203,13 +218,45 @@ class PlanCache:
                         "delete from plans where key in (select key from"
                         " plans order by last_used asc, created asc"
                         " limit ?)", (n - self.cap,))
+                    self.evictions_disk += n - self.cap
                 self._conn.commit()
             except Exception:  # pragma: no cover
                 pass
 
+    # -- engine plan introspection -------------------------------------------
+    def record_explain(self, key: str, text: str) -> None:
+        """Attach the engine's EXPLAIN output to a cached plan (captured
+        once per plan by the SQLEngine; '' marks capture as unsupported so
+        it is not retried).  Persisted next to the rendered SQL."""
+        self._explains[key] = text
+        if self._conn is not None:
+            try:
+                self._conn.execute(
+                    "update plans set explain_text = ? where key = ?",
+                    (text, key))
+                self._conn.commit()
+            except Exception:  # pragma: no cover
+                pass
+
+    def get_explain(self, key: str) -> str | None:
+        """EXPLAIN text for a cached plan (None: never captured)."""
+        text = self._explains.get(key)
+        if text is None and self._conn is not None:
+            try:
+                row = self._conn.execute(
+                    "select explain_text from plans where key = ?",
+                    (key,)).fetchone()
+            except Exception:  # pragma: no cover
+                row = None
+            if row and row[0] is not None:
+                text = row[0]
+                self._explains[key] = text
+        return text
+
     def clear(self) -> None:
         self._mem.clear()
         self._touched.clear()
+        self._explains.clear()
         if self._conn is not None:
             try:
                 self._conn.execute("delete from plans")
@@ -229,6 +276,9 @@ class PlanCache:
     @property
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "evictions_disk": self.evictions_disk,
+                "explains": len(self._explains),
                 "entries": len(self), "cap": self.cap, "path": self.path}
 
     def close(self) -> None:

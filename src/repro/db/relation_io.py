@@ -17,8 +17,15 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.relational import RelTensor
+from ..obs import tracer_of
 from .adapter import Adapter, _check_ident
 from .dialect import json_to_matrix, matrix_to_json
+
+
+def _count_ingest(adapter: Adapter, a: np.ndarray) -> None:
+    """Ingestion volume counters (``SQLEngine.stats`` → ``adapter``)."""
+    adapter.counters["ingest_bytes"] += int(a.nbytes)
+    adapter.counters["ingest_cells"] += int(a.size)
 
 #: column layout of every matrix table, matching the paper's Fig. 1
 MATRIX_COLUMNS = (("i", "integer"), ("j", "integer"), ("v", "double precision"))
@@ -125,12 +132,15 @@ def write_matrix(adapter: Adapter, name: str, x) -> None:
     Non-finite values always take the VALUES path (sqlite's JSON parser
     rejects NaN/Infinity tokens)."""
     a = np.asarray(x, dtype=np.float64)
-    adapter.create_table(name, MATRIX_COLUMNS)
-    if (getattr(adapter, "prefers_json_ingest", False) and a.ndim == 2
-            and np.isfinite(a).all()):
-        adapter.insert_matrix_json(name, a)
-    else:
-        adapter.insert_columns(name, matrix_to_columns(a))
+    with tracer_of(adapter).span("io.write_matrix", table=name,
+                                 cells=int(a.size)):
+        adapter.create_table(name, MATRIX_COLUMNS)
+        if (getattr(adapter, "prefers_json_ingest", False) and a.ndim == 2
+                and np.isfinite(a).all()):
+            adapter.insert_matrix_json(name, a)
+        else:
+            adapter.insert_columns(name, matrix_to_columns(a))
+        _count_ingest(adapter, a)
 
 
 def write_matrix_json(adapter: Adapter, name: str, x) -> None:
@@ -161,8 +171,12 @@ def write_matrix_array(adapter: Adapter, name: str, x) -> None:
     """CREATE + ingest ``x`` in the *array* representation: one row, one
     array-typed (JSON codec) column — the leaf layout the ``array`` dialect
     renders against (``SQLEngine(dialect="array")``)."""
-    adapter.create_table(name, ARRAY_COLUMNS)
-    adapter.bulk_insert(name, [(matrix_to_json(x),)])
+    a = np.asarray(x, dtype=np.float64)
+    with tracer_of(adapter).span("io.write_matrix_array", table=name,
+                                 cells=int(a.size)):
+        adapter.create_table(name, ARRAY_COLUMNS)
+        adapter.bulk_insert(name, [(matrix_to_json(a),)])
+        _count_ingest(adapter, a)
 
 
 def read_matrix_array(adapter: Adapter, name: str) -> np.ndarray:
@@ -171,8 +185,11 @@ def read_matrix_array(adapter: Adapter, name: str) -> np.ndarray:
 
 
 def write_reltensor(adapter: Adapter, name: str, rt: RelTensor) -> None:
-    adapter.create_table(name, MATRIX_COLUMNS)
-    adapter.insert_columns(name, reltensor_to_columns(rt))
+    with tracer_of(adapter).span("io.write_reltensor", table=name):
+        adapter.create_table(name, MATRIX_COLUMNS)
+        i, j, v = reltensor_to_columns(rt)
+        adapter.insert_columns(name, (i, j, v))
+        _count_ingest(adapter, v)
 
 
 def read_reltensor(adapter: Adapter, name: str,

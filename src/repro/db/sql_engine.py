@@ -30,6 +30,8 @@ import numpy as np
 
 from ..core import autodiff
 from ..core import expr as E
+from ..core import sqlgen
+from ..obs import tracer_of
 from . import plan_cache, relation_io
 from .adapter import Adapter, connect
 from .dialect import get_dialect, json_to_matrix
@@ -67,7 +69,7 @@ class SQLEngine:
 
     def __init__(self, backend: str = "sqlite", path: str = ":memory:",
                  adapter: Adapter | None = None, plan_cache_=None,
-                 dialect=None):
+                 dialect=None, tracer=None):
         """``plan_cache_``: a :class:`repro.db.plan_cache.PlanCache`,
         ``None`` for the shared persistent default, or ``False`` to render
         every query from scratch.
@@ -76,7 +78,12 @@ class SQLEngine:
         ``"array"`` for the array-typed representation (paper §5/§7: same
         engine, one row per matrix, UDF calls per node) while the adapter
         still supplies the connection.  ``None`` keeps the adapter's
-        native relational dialect."""
+        native relational dialect.
+
+        ``tracer``: a :class:`repro.obs.Tracer` to pin to this engine (and
+        its adapter).  ``None`` (default) defers to the ambient tracer
+        (:func:`repro.obs.use` / :func:`repro.obs.install`), which is a
+        zero-cost no-op unless one was installed."""
         self.adapter = adapter if adapter is not None else connect(backend, path)
         if dialect is None:
             self.dialect = self.adapter.dialect
@@ -86,6 +93,9 @@ class SQLEngine:
                 self.dialect.prepare(self.adapter.conn)
         self.representation = self.dialect.representation
         self.plans = plan_cache.resolve(plan_cache_)
+        self.tracer = tracer
+        if tracer is not None:
+            self.adapter.tracer = tracer
 
     # -- representation conversion (Engine-compatible no-ops) ---------------
     def lift(self, x):
@@ -119,10 +129,42 @@ class SQLEngine:
         """Multi-root WITH query via the plan cache (or direct on miss)."""
         if self.plans is not None:
             return self.plans.dag_sql(roots, self.dialect, tail="multi_root")
-        from ..core import sqlgen
         return sqlgen.to_sql(roots,
                              select=sqlgen.multi_root_tail(roots, self.dialect),
                              dialect=self.dialect)
+
+    def _plan_key(self, roots: list[E.Expr]) -> str:
+        """The cache key ``evaluate`` queries run under (multi-root tail)."""
+        return plan_cache.plan_key(
+            roots, extra=(self.dialect.name, "tail:multi_root"))
+
+    def _ensure_explained(self, key: str, sql: str) -> None:
+        """Capture the engine's EXPLAIN output for a cached plan, once.
+        Must run *after* ``_write_env`` — sqlite's EXPLAIN QUERY PLAN
+        resolves table names.  A failed capture records ``''`` so it is
+        not retried on every call."""
+        if self.plans is None or self.plans.get_explain(key) is not None:
+            return
+        try:
+            text = self.adapter.explain_sql(sql)
+        except Exception:
+            text = ""
+        self.plans.record_explain(key, text)
+
+    def explain(self, roots: list[E.Expr]) -> str:
+        """The engine's plan for this DAG (EXPLAIN QUERY PLAN on sqlite,
+        EXPLAIN on duckdb).  Leaf tables must exist — evaluate the DAG (or
+        call after a training run) first; returns ``''`` where the engine
+        cannot explain the query."""
+        sql = self._render(roots)
+        if self.plans is not None:
+            key = self._plan_key(roots)
+            self._ensure_explained(key, sql)
+            return self.plans.get_explain(key) or ""
+        try:
+            return self.adapter.explain_sql(sql)
+        except Exception:
+            return ""
 
     def _decode(self, rows, roots: list[E.Expr]) -> list[np.ndarray]:
         """Result rows → one dense matrix per root.  Relational: tagged
@@ -135,6 +177,18 @@ class SQLEngine:
             outs[int(r)] = json_to_matrix(m)
         return outs
 
+    def _root_attrs(self, roots: list[E.Expr]) -> dict:
+        """Per-IR-node attribution carried by the evaluation root span.
+        Only computed when a collecting tracer is active (dag_signature
+        hashes the whole DAG — never on the no-op path)."""
+        return {
+            "root": getattr(roots[0], "name", None) or type(roots[0]).__name__,
+            "n_roots": len(roots),
+            "dag_signature": sqlgen.dag_signature(roots)[:16],
+            "dialect": self.dialect.name,
+            "representation": self.representation,
+        }
+
     def evaluate(self, roots: list[E.Expr], env: dict) -> list[np.ndarray]:
         """One round trip: write leaves, run ONE multi-root query, read back.
 
@@ -142,19 +196,56 @@ class SQLEngine:
         so shared CTEs (forward values reused by Algorithm 1's backward
         pass) are rendered — and executable by the engine — exactly once.
         """
-        self._write_env(roots, env)
-        rows = self.adapter.execute(self._render(roots))
-        return self._decode(rows, roots)
+        tr = tracer_of(self, self.adapter)
+        if not tr.enabled:
+            self._write_env(roots, env)
+            rows = self.adapter.execute(self._render(roots))
+            return self._decode(rows, roots)
+        with tr.span("sql.evaluate", **self._root_attrs(roots)) as root_sp:
+            bytes0 = self.adapter.db_bytes()
+            with tr.span("sql.ingest"):
+                self._write_env(roots, env)
+            hits0 = self.plans.hits if self.plans is not None else 0
+            with tr.span("sql.render") as sp:
+                sql = self._render(roots)
+                if self.plans is not None:
+                    sp.set(cache="hit" if self.plans.hits > hits0 else "miss")
+            if self.plans is not None:
+                with tr.span("sql.explain"):
+                    self._ensure_explained(self._plan_key(roots), sql)
+            rows = self.adapter.execute(sql)
+            with tr.span("sql.decode"):
+                outs = self._decode(rows, roots)
+            bytes1 = self.adapter.db_bytes()
+            root_sp.set(rows_returned=len(rows),
+                        db_bytes=(None if bytes0 is None or bytes1 is None
+                                  else bytes1 - bytes0))
+            return outs
 
     def eval_fn(self, roots: list[E.Expr]) -> Callable:
         """Evaluator with the Engine.eval_fn contract (no jit — the
         "compilation" is the SQL rendering, done once here and reused from
         the plan cache across topologically identical graphs)."""
         sql = self._render(roots)
+        explained = [self.plans is None]  # explain once, after tables exist
 
         def fn(env: dict) -> list[np.ndarray]:
-            self._write_env(roots, env)
-            return self._decode(self.adapter.execute(sql), roots)
+            tr = tracer_of(self, self.adapter)
+            if not tr.enabled:
+                self._write_env(roots, env)
+                return self._decode(self.adapter.execute(sql), roots)
+            with tr.span("sql.evaluate", **self._root_attrs(roots)) as root_sp:
+                with tr.span("sql.ingest"):
+                    self._write_env(roots, env)
+                if not explained[0]:
+                    with tr.span("sql.explain"):
+                        self._ensure_explained(self._plan_key(roots), sql)
+                    explained[0] = True
+                rows = self.adapter.execute(sql)
+                with tr.span("sql.decode"):
+                    outs = self._decode(rows, roots)
+                root_sp.set(rows_returned=len(rows))
+                return outs
 
         return fn
 
@@ -170,6 +261,35 @@ class SQLEngine:
             return outs[0], {v.name: g for v, g in zip(wrt, outs[1:])}
 
         return vg
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        """One merged counter view over the whole engine: plan-cache
+        hit/miss/eviction counters (the LRU no longer evicts silently),
+        adapter query/ingestion counters, and — when a collecting tracer is
+        pinned — its counters/gauges.  Flat convenience keys up front for
+        the common questions; the nested dicts carry everything."""
+        cache = self.plans.stats if self.plans is not None else {}
+        adapter = dict(self.adapter.counters)
+        out = {
+            "cache_hits": cache.get("hits", 0),
+            "cache_misses": cache.get("misses", 0),
+            "cache_evictions": (cache.get("evictions", 0)
+                                + cache.get("evictions_disk", 0)),
+            "queries": adapter.get("queries", 0),
+            "ingest_bytes": adapter.get("ingest_bytes", 0),
+            "plan_cache": cache,
+            "adapter": adapter,
+        }
+        db_bytes = self.adapter.db_bytes()
+        if db_bytes is not None:
+            out["db_bytes"] = db_bytes
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            out["tracer"] = {"spans": len(tr.spans),
+                             "counters": tr.counters, "gauges": tr.gauges}
+        return out
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:

@@ -34,13 +34,14 @@ import numpy as np
 from ..core import expr as E
 from ..core import sqlgen
 from ..core.recursive_cte import recursive_cte_py
+from ..obs import tracer_of
 from . import plan_cache, relation_io
 from .adapter import Adapter, connect
 from .dialect import json_to_matrix, matrix_to_json
 from .sql_engine import SQLEngine
 
 
-def _training_sql(graph, kind: str, dialect_name: str, render, cache,
+def _training_sql(graph, kind: str, adapter: Adapter, render, cache,
                   *key_extra) -> str:
     """Render one of the training statements through the plan cache:
     keyed by the loss DAG's structural signature × renderer fingerprint ×
@@ -48,12 +49,19 @@ def _training_sql(graph, kind: str, dialect_name: str, render, cache,
     (or the next training session) skips ``sqlgen`` entirely.  ``cache``
     follows the :func:`repro.db.plan_cache.resolve` convention (None →
     shared default, False → render fresh)."""
+    dialect_name = adapter.dialect.name
     cache = plan_cache.resolve(cache)
-    if cache is None:
-        return render()
-    key = plan_cache.plan_key(
-        [graph.loss], extra=(dialect_name, f"train:{kind}") + key_extra)
-    return cache.rendered(key, dialect_name, render)
+    tr = tracer_of(adapter)
+    with tr.span("sql.render", kind=f"train:{kind}") as sp:
+        if cache is None:
+            return render()
+        key = plan_cache.plan_key(
+            [graph.loss], extra=(dialect_name, f"train:{kind}") + key_extra)
+        hits0 = cache.hits
+        sql = cache.rendered(key, dialect_name, render)
+        if tr.enabled:
+            sp.set(cache="hit" if cache.hits > hits0 else "miss")
+        return sql
 
 
 @dataclasses.dataclass
@@ -86,20 +94,25 @@ def _open(backend: str, path: str, adapter: Adapter | None) -> tuple[Adapter, bo
 def _train_recursive_arrays(graph, weights, x, y_onehot, n_iters,
                             adapter: Adapter, cache=None) -> DBTrainResult:
     """One recursive query over array-typed columns (sqlite-executable)."""
-    adapter.create_table("weights", [("w_xh", "text"), ("w_ho", "text")])
-    adapter.bulk_insert("weights", [(matrix_to_json(weights["w_xh"]),
-                                     matrix_to_json(weights["w_ho"]))])
-    adapter.create_table("data", [("img", "text"), ("one_hot", "text")])
-    adapter.bulk_insert("data", [(matrix_to_json(x), matrix_to_json(y_onehot))])
+    tr = tracer_of(adapter)
+    with tr.span("train.ingest", representation="array"):
+        adapter.create_table("weights", [("w_xh", "text"), ("w_ho", "text")])
+        adapter.bulk_insert("weights", [(matrix_to_json(weights["w_xh"]),
+                                         matrix_to_json(weights["w_ho"]))])
+        adapter.create_table("data", [("img", "text"), ("one_hot", "text")])
+        adapter.bulk_insert("data",
+                            [(matrix_to_json(x), matrix_to_json(y_onehot))])
     sql = _training_sql(
-        graph, "array_calls", adapter.dialect.name,
+        graph, "array_calls", adapter,
         lambda: sqlgen.training_query_array_calls(graph, n_iters,
                                                   graph.spec.lr),
         cache, n_iters, graph.spec.lr)
+    tr.gauge("recursive_cte_depth", n_iters)
     rows = sorted(adapter.execute(sql))  # (iter, w_xh, w_ho)
-    history = [{"w_xh": json_to_matrix(wxh), "w_ho": json_to_matrix(who)}
-               for _it, wxh, who in rows]
-    cte_bytes = sum(len(wxh) + len(who) for _it, wxh, who in rows)
+    with tr.span("train.decode", rows=len(rows)):
+        history = [{"w_xh": json_to_matrix(wxh), "w_ho": json_to_matrix(who)}
+                   for _it, wxh, who in rows]
+        cte_bytes = sum(len(wxh) + len(who) for _it, wxh, who in rows)
     return DBTrainResult(weights=history[-1], history=history,
                          strategy="recursive", sql=sql, cte_bytes=cte_bytes)
 
@@ -108,44 +121,52 @@ def _train_recursive_listing7(graph, weights, x, y_onehot, n_iters,
                               adapter: Adapter, cache=None) -> DBTrainResult:
     """Listing 7 verbatim — engines whose recursive CTEs are set-at-a-time
     and allow the recursive table inside a nested WITH (duckdb)."""
-    relation_io.write_matrix(adapter, "img", x)
-    relation_io.write_matrix(adapter, "one_hot", y_onehot)
-    relation_io.write_matrix(adapter, "w_xh_init", weights["w_xh"])
-    relation_io.write_matrix(adapter, "w_ho_init", weights["w_ho"])
+    tr = tracer_of(adapter)
+    with tr.span("train.ingest", representation="relational"):
+        relation_io.write_matrix(adapter, "img", x)
+        relation_io.write_matrix(adapter, "one_hot", y_onehot)
+        relation_io.write_matrix(adapter, "w_xh_init", weights["w_xh"])
+        relation_io.write_matrix(adapter, "w_ho_init", weights["w_ho"])
     sql = _training_sql(
-        graph, "listing7", adapter.dialect.name,
+        graph, "listing7", adapter,
         lambda: sqlgen.training_query_sql92(graph, n_iters, graph.spec.lr,
                                             adapter.dialect),
         cache, n_iters, graph.spec.lr)
+    tr.gauge("recursive_cte_depth", n_iters)
     rows = adapter.execute(sql)  # (iter, id, i, j, v)
-    return _history_from_w_rows(rows, graph, sql, "recursive")
+    with tr.span("train.decode", rows=len(rows)):
+        return _history_from_w_rows(rows, graph, sql, "recursive")
 
 
 def _train_stepped(graph, weights, x, y_onehot, n_iters,
                    adapter: Adapter, cache=None) -> DBTrainResult:
     """Listing 7's step as INSERT…SELECT, iterated by ``recursive_cte_py``."""
-    relation_io.write_matrix(adapter, "img", x)
-    relation_io.write_matrix(adapter, "one_hot", y_onehot)
-    adapter.create_table("w", [("iter", "integer"), ("id", "integer"),
-                               ("i", "integer"), ("j", "integer"),
-                               ("v", "double precision")])
-    for wid, key in ((0, "w_xh"), (1, "w_ho")):
-        i, j, v = relation_io.matrix_to_columns(weights[key])
-        adapter.insert_columns("w", (np.zeros_like(i),
-                                     np.full_like(i, wid), i, j, v))
+    tr = tracer_of(adapter)
+    with tr.span("train.ingest", representation="relational"):
+        relation_io.write_matrix(adapter, "img", x)
+        relation_io.write_matrix(adapter, "one_hot", y_onehot)
+        adapter.create_table("w", [("iter", "integer"), ("id", "integer"),
+                                   ("i", "integer"), ("j", "integer"),
+                                   ("v", "double precision")])
+        for wid, key in ((0, "w_xh"), (1, "w_ho")):
+            i, j, v = relation_io.matrix_to_columns(weights[key])
+            adapter.insert_columns("w", (np.zeros_like(i),
+                                         np.full_like(i, wid), i, j, v))
     step_sql = _training_sql(
-        graph, "stepped", adapter.dialect.name,
+        graph, "stepped", adapter,
         lambda: sqlgen.training_step_sql92(graph, graph.spec.lr,
                                            adapter.dialect),
         cache, graph.spec.lr)
 
     def step(_state, _it):
-        adapter.execute(step_sql)
+        with tr.span("train.step", iter=_it):
+            adapter.execute(step_sql)
         return _state
 
     recursive_cte_py(None, step, n_iters)
     rows = adapter.execute("select iter, id, i, j, v from w")
-    return _history_from_w_rows(rows, graph, step_sql, "stepped")
+    with tr.span("train.decode", rows=len(rows)):
+        return _history_from_w_rows(rows, graph, step_sql, "stepped")
 
 
 def _history_from_w_rows(rows, graph, sql, strategy) -> DBTrainResult:
@@ -193,7 +214,8 @@ def train_in_db(graph, weights, x, y_onehot, n_iters: int, *,
     if representation not in ("auto", "array", "relational"):
         raise ValueError(f"unknown representation {representation!r}")
     adapter, owned = _open(backend, path, adapter)
-    try:
+
+    def dispatch() -> DBTrainResult:
         if strategy == "recursive":
             if representation == "array" or (
                     representation == "auto"
@@ -216,6 +238,13 @@ def train_in_db(graph, weights, x, y_onehot, n_iters: int, *,
             return _train_stepped(graph, weights, x, y_onehot, n_iters,
                                   adapter, plan_cache_)
         raise ValueError(f"unknown strategy {strategy!r}")
+
+    tr = tracer_of(adapter)
+    try:
+        with tr.span("train.in_db", strategy=strategy,
+                     representation=representation, n_iters=n_iters,
+                     backend=adapter.dialect.name):
+            return dispatch()
     finally:
         if owned:
             adapter.close()
@@ -246,15 +275,17 @@ def predict_in_db(graph, weights, x, *, backend: str = "sqlite",
     output relation, computed by the database.  Returns 0-based labels."""
     adapter, owned = _open(backend, path, adapter)
     try:
-        eng = SQLEngine(adapter=adapter)
-        eng._write_env([graph.a_ho], {**weights, "img": x})
-        tail = (f"select q.i, min(q.j) from (select i, j, v,"
-                f" max(v) over (partition by i) as mv"
-                f" from {graph.a_ho.name}) q"
-                f" where q.v = q.mv group by q.i order by q.i")
-        sql = sqlgen.to_sql92([graph.a_ho], select=tail, dialect=eng.dialect)
-        rows = adapter.execute(sql)
-        return np.asarray([j - 1 for _i, j in rows], dtype=np.int32)
+        with tracer_of(adapter).span("train.predict"):
+            eng = SQLEngine(adapter=adapter)
+            eng._write_env([graph.a_ho], {**weights, "img": x})
+            tail = (f"select q.i, min(q.j) from (select i, j, v,"
+                    f" max(v) over (partition by i) as mv"
+                    f" from {graph.a_ho.name}) q"
+                    f" where q.v = q.mv group by q.i order by q.i")
+            sql = sqlgen.to_sql92([graph.a_ho], select=tail,
+                                  dialect=eng.dialect)
+            rows = adapter.execute(sql)
+            return np.asarray([j - 1 for _i, j in rows], dtype=np.int32)
     finally:
         if owned:
             adapter.close()

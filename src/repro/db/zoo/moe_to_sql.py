@@ -243,14 +243,18 @@ def run_moe_in_db(cfg: MoESQLConfig, params: dict, x, *,
     """Evaluate the full MoE layer inside the database; returns (T, d).
     ``batched=True`` uses the expert-indexed stacked weight relations
     (:func:`moe_ffn_graph_batched`) instead of E per-expert tables."""
+    from ...obs import tracer_of
     from ..sql_engine import SQLEngine
 
     graph = moe_ffn_graph_batched(cfg) if batched else moe_ffn_graph(cfg)
     env = (moe_env_batched if batched else moe_env)(cfg, params, x)
     eng = engine if engine is not None else SQLEngine(backend=backend)
     try:
-        out, = eng.evaluate([graph.out], env)
-        return out
+        with tracer_of(eng, eng.adapter).span(
+                "zoo.moe_layer", n_experts=cfg.n_experts, top_k=cfg.top_k,
+                batched=batched):
+            out, = eng.evaluate([graph.out], env)
+            return out
     finally:
         if engine is None:
             eng.close()

@@ -128,6 +128,7 @@ def run_rwkv6_in_db(r, k, v, w, u, s0, *, backend: str = "sqlite",
                     engine=None) -> tuple[np.ndarray, np.ndarray]:
     """The time-mix recurrence inside the database: returns
     (o (S, N), s_fin (N, N)) like ``kernels/ref.rwkv6_scan`` per head."""
+    from ...obs import tracer_of
     from ..sql_engine import SQLEngine
 
     seq, n = np.asarray(r).shape
@@ -135,8 +136,10 @@ def run_rwkv6_in_db(r, k, v, w, u, s0, *, backend: str = "sqlite",
     env = rwkv6_env(r, k, v, w, u, s0)
     eng = engine if engine is not None else SQLEngine(backend=backend)
     try:
-        o, states = eng.evaluate([graph.o, graph.state], env)
-        return o, states[-1].reshape(n, n)
+        with tracer_of(eng, eng.adapter).span("zoo.rwkv6_time_mix",
+                                              seq=seq, n=n):
+            o, states = eng.evaluate([graph.o, graph.state], env)
+            return o, states[-1].reshape(n, n)
     finally:
         if engine is None:
             eng.close()
@@ -192,6 +195,7 @@ def rwkv_channel_mix_ref(x, mu_k, mu_r, wk, wv, wr) -> np.ndarray:
 
 def run_channel_mix_in_db(x, mu_k, mu_r, wk, wv, wr, *,
                           backend: str = "sqlite", engine=None) -> np.ndarray:
+    from ...obs import tracer_of
     from ..sql_engine import SQLEngine
 
     seq, d = np.asarray(x).shape
@@ -201,8 +205,10 @@ def run_channel_mix_in_db(x, mu_k, mu_r, wk, wv, wr, *,
            "wv": np.asarray(wv), "wr": np.asarray(wr)}
     eng = engine if engine is not None else SQLEngine(backend=backend)
     try:
-        out, = eng.evaluate([graph.out], env)
-        return out
+        with tracer_of(eng, eng.adapter).span("zoo.channel_mix",
+                                              seq=seq, d=d):
+            out, = eng.evaluate([graph.out], env)
+            return out
     finally:
         if engine is None:
             eng.close()

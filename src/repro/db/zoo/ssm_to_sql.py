@@ -41,6 +41,7 @@ import dataclasses
 import numpy as np
 
 from ...core import expr as E
+from ...obs import tracer_of
 
 
 # ---------------------------------------------------------------------------
@@ -169,17 +170,20 @@ def run_ssd_in_db(x, a, b, c, h0=None, *, chunk: int | None = None,
     seq, p = x.shape
     n = b.shape[1]
     eng = engine if engine is not None else SQLEngine(backend=backend)
+    tr = tracer_of(eng, eng.adapter)
     try:
         chunk = seq if not chunk else min(chunk, seq)
         carry = None if h0 is None else np.asarray(h0)
         ys = []
-        for s in range(0, seq, chunk):
-            e = min(seq, s + chunk)
-            graph = ssd_scan_graph(e - s, n, p)
-            env = ssd_env(x[s:e], a[s:e], b[s:e], c[s:e], carry)
-            y, h = eng.evaluate([graph.y, graph.h], env)
-            ys.append(y)
-            carry = h[-1].reshape(n, p)
+        with tr.span("zoo.ssd_scan", seq=seq, chunk=chunk, n=n, p=p):
+            for s in range(0, seq, chunk):
+                e = min(seq, s + chunk)
+                graph = ssd_scan_graph(e - s, n, p)
+                env = ssd_env(x[s:e], a[s:e], b[s:e], c[s:e], carry)
+                with tr.span("zoo.ssd_chunk", start=s, stop=e):
+                    y, h = eng.evaluate([graph.y, graph.h], env)
+                ys.append(y)
+                carry = h[-1].reshape(n, p)
         return np.concatenate(ys, axis=0), carry
     finally:
         if engine is None:
@@ -268,8 +272,11 @@ def run_lru_in_db(u, a, wb, wc, *, diagonal: bool = False,
                             np.asarray(wc).shape[1], diagonal=diagonal)
     eng = engine if engine is not None else SQLEngine(backend=backend)
     try:
-        y, = eng.evaluate([graph.y], lru_env(graph, u, a, wb, wc))
-        return y
+        with tracer_of(eng, eng.adapter).span(
+                "zoo.lru_forward", seq=graph.seq, d_state=graph.d_state,
+                diagonal=diagonal):
+            y, = eng.evaluate([graph.y], lru_env(graph, u, a, wb, wc))
+            return y
     finally:
         if engine is None:
             eng.close()
@@ -293,8 +300,11 @@ def lru_grads_in_db(u, a, wb, wc, *, diagonal: bool = False,
     wrt = list(graph.leaves)
     eng = engine if engine is not None else SQLEngine(backend=backend)
     try:
-        vg = eng.value_and_grad_fn(loss, wrt)
-        return vg(lru_env(graph, u, a, wb, wc))
+        with tracer_of(eng, eng.adapter).span(
+                "zoo.lru_grads", seq=graph.seq, d_state=graph.d_state,
+                diagonal=diagonal):
+            vg = eng.value_and_grad_fn(loss, wrt)
+            return vg(lru_env(graph, u, a, wb, wc))
     finally:
         if engine is None:
             eng.close()

@@ -1,0 +1,35 @@
+"""Observability for the in-database engine: tracing, metrics, exporters.
+
+The measurement story of the paper (§7 is entirely runtime/memory curves)
+applied to our own stack: :class:`~repro.obs.tracer.Tracer` collects
+nested, attributed spans from every layer of the execution path (plan
+render, cache lookup, leaf ingestion, query execution, result decode,
+training iterations, serving decode steps), counters/gauges ride along,
+and the exporters turn the capture into a Chrome-trace/Perfetto JSON or a
+``trace_spans`` relation *inside the traced database* — engine telemetry
+you query with SQL, like everything else in this repo.
+
+Zero-cost by default: the active tracer is a no-op singleton until
+:func:`install`/:func:`use` swaps a collecting one in (or an engine is
+constructed with ``tracer=...``).
+
+    from repro import obs
+    tracer = obs.Tracer()
+    with obs.use(tracer):
+        eng.evaluate([root], env)           # spans collected everywhere
+    obs.write_chrome_trace(tracer, "trace.json")
+    obs.write_trace_spans(eng.adapter, tracer)   # → SQL-queryable relation
+    print(obs.stage_breakdown(tracer, root="sql.evaluate"))
+"""
+from .export import (STAGE_SQL, TRACE_SPAN_COLUMNS, chrome_trace,
+                     stage_breakdown, summarize, write_chrome_trace,
+                     write_trace_spans)
+from .tracer import (NOOP_SPAN, NullTracer, Span, Tracer, current, install,
+                     tracer_of, use)
+
+__all__ = [
+    "Span", "Tracer", "NullTracer", "NOOP_SPAN",
+    "current", "install", "use", "tracer_of",
+    "chrome_trace", "write_chrome_trace", "write_trace_spans",
+    "summarize", "stage_breakdown", "STAGE_SQL", "TRACE_SPAN_COLUMNS",
+]

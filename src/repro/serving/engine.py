@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import tracer_of
+
 
 @dataclasses.dataclass
 class Request:
@@ -42,12 +44,16 @@ class ServingEngine:
         self.cache = model.init_cache(batch_slots, max_len)
         self.cur_token = np.zeros((batch_slots, 1), np.int32)
         self._decode = jax.jit(model.decode_step)
+        #: optional pinned :class:`repro.obs.Tracer`; ``None`` defers to
+        #: the ambient tracer (no-op unless installed)
+        self.tracer = None
 
     # ------------------------------------------------------------- requests
     def submit(self, req: Request):
         self.queue.append(req)
 
     def _admit(self):
+        tr = tracer_of(self)
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
                 req = self.queue.popleft()
@@ -55,11 +61,15 @@ class ServingEngine:
                 # per-slot prefill: feed prompt tokens through decode_step
                 # (single compiled path; a bulk prefill() is used by the
                 # benchmark harness where the whole batch arrives at once)
-                for i, tok in enumerate(req.prompt):
-                    logits, self.cache = self._decode(
-                        self.params,
-                        self._slot_batch(slot, int(tok)),
-                        self.cache, jnp.int32(i))
+                with tr.span("serve.prefill", uid=req.uid, slot=slot,
+                             prompt_len=len(req.prompt)):
+                    for i, tok in enumerate(req.prompt):
+                        logits, self.cache = self._decode(
+                            self.params,
+                            self._slot_batch(slot, int(tok)),
+                            self.cache, jnp.int32(i))
+                tr.inc("serve.admitted")
+                tr.inc("serve.prefill_tokens", len(req.prompt))
                 self.pos[slot] = len(req.prompt)
                 nxt = self._sample(logits[slot, 0])
                 req.generated.append(int(nxt))
@@ -79,28 +89,34 @@ class ServingEngine:
     # ----------------------------------------------------------------- step
     def step(self) -> list[Request]:
         """One decode step for all active slots; returns finished requests."""
-        self._admit()
-        if not any(r is not None for r in self.active):
-            return []
-        pos = int(max(self.pos[s] for s, r in enumerate(self.active)
-                      if r is not None))
-        logits, self.cache = self._decode(
-            self.params, {"tokens": jnp.asarray(self.cur_token)},
-            self.cache, jnp.int32(pos))
-        finished = []
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            nxt = self._sample(logits[slot, 0])
-            req.generated.append(nxt)
-            self.pos[slot] += 1
-            self.cur_token[slot, 0] = nxt
-            if (len(req.generated) >= req.max_new_tokens
-                    or self.pos[slot] >= self.max_len - 1):
-                req.done = True
-                finished.append(req)
-                self.active[slot] = None
-        return finished
+        tr = tracer_of(self)
+        with tr.span("serve.step") as sp:
+            self._admit()
+            n_active = sum(r is not None for r in self.active)
+            if not n_active:
+                return []
+            pos = int(max(self.pos[s] for s, r in enumerate(self.active)
+                          if r is not None))
+            logits, self.cache = self._decode(
+                self.params, {"tokens": jnp.asarray(self.cur_token)},
+                self.cache, jnp.int32(pos))
+            finished = []
+            for slot, req in enumerate(self.active):
+                if req is None:
+                    continue
+                nxt = self._sample(logits[slot, 0])
+                req.generated.append(nxt)
+                self.pos[slot] += 1
+                self.cur_token[slot, 0] = nxt
+                if (len(req.generated) >= req.max_new_tokens
+                        or self.pos[slot] >= self.max_len - 1):
+                    req.done = True
+                    finished.append(req)
+                    self.active[slot] = None
+            tr.inc("serve.decode_tokens", n_active)
+            if tr.enabled:
+                sp.set(active=n_active, finished=len(finished), pos=pos)
+            return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
         out = []

@@ -73,6 +73,15 @@ def run_both(name: str, roots, env, backend: str, iters: int,
         out[f"{rep}_db_bytes"] = db_bytes(eng)
         out[f"{rep}_max_err"] = err
         eng.close()
+        # the same workload with the CTE-fusion + spool renderers off —
+        # the before/after pair (the default engine fuses)
+        eng_uf = SQLEngine(backend=backend, plan_cache_=False,
+                           fuse=False, spool=False, **opts)
+        fn_uf = eng_uf.eval_fn(roots)
+        fn_uf(env)
+        out[f"{rep}_unfused_s"] = timeit(lambda: fn_uf(env), iters=iters)
+        out[f"{rep}_fused_speedup"] = out[f"{rep}_unfused_s"] / out[f"{rep}_s"]
+        eng_uf.close()
     out["speedup_array"] = out["relational_s"] / out["array_s"]
     out["within_tol"] = bool(max(out["relational_max_err"],
                                  out["array_max_err"]) < TOL)

@@ -145,8 +145,18 @@ def bench_forward_grad(graph, w0, x, y, backend: str, timing_iters: int,
     vg_sql = eng.value_and_grad_fn(graph.loss, [graph.w_xh, graph.w_ho])
     t_warm = once(lambda: vg_sql(env))
     eng.close()
+    # the same warm evaluation with the fusion/spool renderers off — the
+    # before/after pair of the CTE-fusion work (fused is the default)
+    eng_uf = SQLEngine(backend=backend, plan_cache_=False,
+                       fuse=False, spool=False)
+    vg_uf = eng_uf.value_and_grad_fn(graph.loss, [graph.w_xh, graph.w_ho])
+    vg_uf(env)                                 # ingest + render once
+    t_warm_unfused = once(lambda: vg_uf(env))
+    eng_uf.close()
     out[f"{backend}_cold_s"] = t_cold          # incl. rendering + ingest
     out[f"{backend}_warm_s"] = t_warm          # plan cache + leaf skip
+    out[f"{backend}_warm_unfused_s"] = t_warm_unfused
+    out["fused_speedup"] = t_warm_unfused / t_warm
     out["completed_784_forward_grad"] = graph.spec.n_features == 784
     return out
 
@@ -273,8 +283,10 @@ def run(args) -> dict:
     fwd = bench_forward_grad(graph, w0, x, y, backend, args.timing_iters,
                              args.with_relational)
     for k, v in fwd.items():
-        if isinstance(v, float):
+        if isinstance(v, float) and k.endswith("_s"):
             print(f"value_and_grad[{k:>16s}] {v*1e3:10.1f} ms", flush=True)
+    print(f"value_and_grad fused speedup {fwd['fused_speedup']:.1f}x "
+          f"(warm, vs fuse/spool off)", flush=True)
 
     training = bench_training(graph, w0, x, y, args.iters, backend,
                               args.with_stepped)
@@ -320,6 +332,9 @@ def run(args) -> dict:
                 bool(fwd.get("completed_784_forward_grad")),
             "trace_attribution_ge_90":
                 trace["train_iteration"]["attribution"] >= 0.9,
+            # the fusion/spool renderers (default-on) must beat the
+            # unfused rendering of the same warm evaluation in-run
+            "fused_warm_beats_unfused": fwd["fused_speedup"] > 1.0,
         },
     }
     return report

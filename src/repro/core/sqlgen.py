@@ -30,6 +30,7 @@ same DAG, same engine, two representations.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 
 from . import expr as E
@@ -305,7 +306,14 @@ def _mat_scan_ctes_packed(node: E.MatRecurrence, nm: dict[int, str],
     t_rows, d = node.shape
     tr = int(node.transposed)
     anchor_t, nxt, guard = _mat_scan_bounds(node)
-    tag = "printf('%d,%d,%.17g', i, j, v)"
+    # %.17g round-trips every finite double but NOT the non-finite ones:
+    # sqlite stores a bound NaN as NULL (printf then renders the value as
+    # 0 — a silent wrong answer), and both engines spell infinities in
+    # ways float() happens to accept ("Inf").  Tag NULL/NaN cells
+    # explicitly so the mcellcat codec sees the same spellings the VALUES
+    # gate produces.
+    tag = ("case when v is null or v != v then printf('%d,%d,nan', i, j)"
+           " else printf('%d,%d,%.17g', i, j, v) end")
     packs = [
         f"{me}_pa(m) as (\n  select mcellcat(group_concat({tag}, '|'),"
         f" {t_rows * d}, {d}) as m from {a}\n)",
@@ -343,23 +351,201 @@ def _with_keyword(dialect, recursive: bool = False) -> str:
         else "with"
 
 
-def _render_ctes(roots: list[E.Expr], dialect
+# ---------------------------------------------------------------------------
+# peephole fusion: collapse single-consumer elementwise chains into one
+# SQL expression (ROADMAP "raw speed" item — sqlite's substitution-based
+# CTE flattener re-executes every textual reference, so fewer CTEs means
+# measurably fewer passes over the same cells)
+# ---------------------------------------------------------------------------
+
+_FUSIBLE_DERIVS = (E.SIGMOID, E.SQUARE, E.RELU, E.RECIP)
+
+
+def _fusible(node) -> bool:
+    """Nodes the peephole pass may collapse into a parent's expression:
+    the shape-preserving elementwise tier with a per-cell spelling in BOTH
+    representations (``MapDeriv``/ONE_MINUS is array-only — excluded)."""
+    if isinstance(node, (E.Add, E.Sub, E.Hadamard, E.Scale, E.Map)):
+        return True
+    return isinstance(node, MapDeriv) and node.fn in _FUSIBLE_DERIVS
+
+
+def _used_children(node):
+    """Children the RENDERED SQL actually references — ``MapDeriv`` keeps
+    both ``x`` and ``fx`` pointers but each fn's spelling reads one."""
+    if isinstance(node, MapDeriv):
+        return (node.fx,) if node.fn in (E.SIGMOID, E.RECIP) else (node.x,)
+    return node.children()
+
+
+def fuse_dag(roots: list[E.Expr]):
+    """The fusion analysis: partition the DAG into single-consumer
+    elementwise REGIONS, each rendered as ONE SQL expression instead of
+    one CTE per node.
+
+    Returns ``(regions, skip)``: ``regions[id(root)] = (members, inputs)``
+    — ``members`` the region's nodes (region root first), ``inputs`` the
+    deduped boundary nodes its fused expression references (one join leg /
+    scalar subquery each); ``skip`` the ids that no longer render a CTE
+    (absorbed members, plus constants inlined by every consumer).
+
+    Fan-out safety: a node is absorbed only when the region holds its ONLY
+    rendered reference and it is not itself a query root — a multi-consumer
+    subexpression is never duplicated.  ``Const`` leaves are the exception:
+    they inline as literals (duplicating a literal is free), but a region
+    keeps at least one non-Const input so the row frame always comes from a
+    real relation, never from a folded-away constant CTE.
+    """
+    order = E.topo_order(*roots)
+    consumers: dict[int, int] = {}
+    for nd in order:
+        for c in _used_children(nd):
+            consumers[id(c)] = consumers.get(id(c), 0) + 1
+    root_ids = {id(r) for r in roots}
+    absorbed: set[int] = set()
+    const_inlined: dict[int, int] = {}
+    regions: dict[int, tuple[list, list]] = {}
+    for nd in reversed(order):
+        if not _fusible(nd) or id(nd) in absorbed:
+            continue
+        members: list[E.Expr] = []
+        inputs: list[E.Expr] = []
+        consts: list[E.Expr] = []
+        seen: set[int] = set()
+
+        def grow(n):
+            members.append(n)
+            for c in _used_children(n):
+                if isinstance(c, E.Const):
+                    consts.append(c)
+                elif (_fusible(c) and id(c) not in root_ids
+                        and consumers.get(id(c), 0) == 1):
+                    grow(c)
+                elif id(c) not in seen:
+                    seen.add(id(c))
+                    inputs.append(c)
+
+        grow(nd)
+        if not inputs:  # all-constant region: keep the frame CTEs as-is
+            continue
+        for c in consts:
+            const_inlined[id(c)] = const_inlined.get(id(c), 0) + 1
+        absorbed.update(id(m) for m in members[1:])
+        regions[id(nd)] = (members, inputs)
+    skip = set(absorbed)
+    for nd in order:
+        if (isinstance(nd, E.Const) and id(nd) not in root_ids
+                and 0 < consumers.get(id(nd), 0)
+                <= const_inlined.get(id(nd), 0)):
+            skip.add(id(nd))
+    return regions, skip
+
+
+def _fused_expr(node: E.Expr, alias: dict[int, str], dialect) -> str:
+    """The per-cell expression of a fused region (relational spelling).
+    Every non-atomic result is parenthesised, so nesting into duplicating
+    map templates (``{v}*{v}``) stays precedence-safe."""
+    if id(node) in alias:
+        return f"{alias[id(node)]}.v"
+    if isinstance(node, E.Const):
+        return repr(float(node.value))
+    if isinstance(node, (E.Add, E.Sub, E.Hadamard)):
+        op = {"Hadamard": "*", "Add": "+", "Sub": "-"}[type(node).__name__]
+        return (f"({_fused_expr(node.x, alias, dialect)} {op} "
+                f"{_fused_expr(node.y, alias, dialect)})")
+    if isinstance(node, E.Scale):
+        return f"({node.c} * {_fused_expr(node.x, alias, dialect)})"
+    if isinstance(node, E.Map):
+        inner = _fused_expr(node.x, alias, dialect)
+        return f"({dialect.map_sql(node.fn, inner)})"
+    if isinstance(node, MapDeriv):
+        if node.fn is E.SIGMOID:   # out·(1-out) from the cached expression
+            fx = _fused_expr(node.fx, alias, dialect)
+            return f"({fx} * (1 - {fx}))"
+        if node.fn is E.SQUARE:
+            return f"(2 * {_fused_expr(node.x, alias, dialect)})"
+        if node.fn is E.RELU:
+            inner = _fused_expr(node.x, alias, dialect)
+            return f"(case when {inner} > 0 then 1 else 0 end)"
+        if node.fn is E.RECIP:     # -1/x² = -out² from the cached expression
+            fx = _fused_expr(node.fx, alias, dialect)
+            return f"(-({fx} * {fx}))"
+    raise TypeError(type(node))
+
+
+def _fused_cte_sql(node: E.Expr, inputs: list[E.Expr],
+                   nm: dict[int, str], dialect) -> str:
+    """One region, one select: the first boundary input provides the row
+    frame, every further input joins on (i, j) exactly once — fan-in
+    without fan-out, so no subexpression is ever recomputed."""
+    alias = {id(c): f"f{k}" for k, c in enumerate(inputs)}
+    expr = _fused_expr(node, alias, dialect)
+    frm = f"{nm[id(inputs[0])]} as f0"
+    for k, c in enumerate(inputs[1:], start=1):
+        frm += (f"\n  inner join {nm[id(c)]} as f{k}"
+                f" on f{k}.i = f0.i and f{k}.j = f0.j")
+    return f"select f0.i, f0.j, {expr} as v\n  from {frm}"
+
+
+def _fused_array_cte_sql(node: E.Expr, inputs: list[E.Expr],
+                         nm: dict[int, str]) -> str:
+    """The array-representation fused spelling: the region renders as one
+    nested UDF call chain; boundary inputs stay scalar subqueries against
+    their CTEs, exactly like the unfused rendering's child references."""
+    input_ids = {id(c) for c in inputs}
+
+    def ref(c):
+        if id(c) in input_ids:
+            return f"(select m from {nm[id(c)]})"
+        sql = _array_call(c, ref)
+        if sql is None:
+            raise TypeError(type(c))
+        return sql
+
+    sql = _array_call(node, ref)
+    if sql is None:
+        raise TypeError(type(node))
+    return sql
+
+
+def _node_ctes(node: E.Expr, nm: dict[int, str], dialect, regions,
+               representation: str) -> list[str]:
+    """The CTE strings one surviving node renders to (a MatRecurrence
+    lowers to several; a fused region root carries its whole region)."""
+    if representation == "array":
+        if isinstance(node, E.Recurrence):
+            return _array_scan_ctes(node, nm)
+        if isinstance(node, E.MatRecurrence):
+            return _array_mat_scan_ctes(node, nm)
+        if id(node) in regions:
+            body = _fused_array_cte_sql(node, regions[id(node)][1], nm)
+        else:
+            body = _array_cte_sql(node, nm)
+        return [f"{nm[id(node)]}(m) as (\n  select {body} as m\n)"]
+    if isinstance(node, E.MatRecurrence):
+        return _mat_scan_ctes(node, nm, dialect)
+    if id(node) in regions:
+        body = _fused_cte_sql(node, regions[id(node)][1], nm, dialect)
+    else:
+        body = _cte_sql(node, nm, dialect)
+    return [f"{nm[id(node)]}(i, j, v) as (\n  {body}\n)"]
+
+
+def _render_ctes(roots: list[E.Expr], dialect, fuse: bool = False,
+                 representation: str = "relational"
                  ) -> tuple[list[str], dict[int, str], bool]:
     """(ctes, id→name map, whether a self-referencing scan is present)."""
     order = E.topo_order(*roots)
     nm = assign_names(order)
+    regions, skip = fuse_dag(roots) if fuse else ({}, set())
     ctes: list[str] = []
     has_scan = False
     for node in order:
         has_scan = has_scan or isinstance(node, (E.Recurrence,
                                                  E.MatRecurrence))
-        if isinstance(node, E.Var):
+        if isinstance(node, E.Var) or id(node) in skip:
             continue
-        if isinstance(node, E.MatRecurrence):
-            ctes += _mat_scan_ctes(node, nm, dialect)
-        else:
-            ctes.append(f"{nm[id(node)]}(i, j, v) as "
-                        f"(\n  {_cte_sql(node, nm, dialect)}\n)")
+        ctes += _node_ctes(node, nm, dialect, regions, representation)
     return ctes, nm, has_scan
 
 
@@ -372,16 +558,18 @@ def render_ctes(roots: list[E.Expr], dialect=None
     return ctes, nm
 
 
-def to_sql92(roots: list[E.Expr], select=None, dialect=None) -> str:
+def to_sql92(roots: list[E.Expr], select=None, dialect=None,
+             fuse: bool = False) -> str:
     """Emit a WITH query: one CTE per non-leaf node, topologically ordered.
 
     ``select`` is the query tail: a literal string, or a callable
     ``select(nm)`` receiving the id→name map (use the callable form for
     tails that reference auto-named roots — their CTE names are assigned at
-    render time)."""
+    render time).  ``fuse=True`` runs the :func:`fuse_dag` peephole pass
+    first: single-consumer elementwise chains collapse into one CTE."""
     dialect = _get_dialect(dialect)
     # has_scan: a Recurrence CTE references itself — WITH must say RECURSIVE
-    ctes, nm, has_scan = _render_ctes(roots, dialect)
+    ctes, nm, has_scan = _render_ctes(roots, dialect, fuse=fuse)
     if callable(select):
         select = select(nm)
     tail = select or f"select * from {nm[id(roots[-1])]} order by i, j"
@@ -422,7 +610,8 @@ def multi_root_tail(roots: list[E.Expr], dialect=None):
     return multi_root_select(roots)
 
 
-def to_sql(roots: list[E.Expr], select=None, dialect=None) -> str:
+def to_sql(roots: list[E.Expr], select=None, dialect=None,
+           fuse: bool = False) -> str:
     """The representation-dispatching entry point: relational dialects
     render through :func:`to_sql92` (one cell-relation CTE per node), the
     array dialect through :func:`to_sql_array_ctes` (one array-typed row
@@ -430,8 +619,171 @@ def to_sql(roots: list[E.Expr], select=None, dialect=None) -> str:
     and ``SQLEngine`` call."""
     dialect = _get_dialect(dialect)
     if dialect.representation == "array":
-        return to_sql_array_ctes(roots, select=select)
-    return to_sql92(roots, select=select, dialect=dialect)
+        return to_sql_array_ctes(roots, select=select, fuse=fuse)
+    return to_sql92(roots, select=select, dialect=dialect, fuse=fuse)
+
+
+# ---------------------------------------------------------------------------
+# spooled plans: materialise multi-referenced subplans as temp tables
+# ---------------------------------------------------------------------------
+
+_PLAN_HEADER = "-- repro:plan v1"
+_STEP_MARK = "-- repro:step "
+_MAIN_MARK = "-- repro:main"
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A rendered evaluation plan: ordered spool ``steps`` — ``(temp
+    table, create-statement)`` pairs materialising multi-referenced
+    subplans — followed by the main statement ``sql``.  Engines without
+    the substitution-flattener pathology get zero steps.  Text round-trip
+    (:meth:`to_text` / :meth:`from_text`) is what the plan cache stores."""
+    sql: str
+    steps: tuple = ()
+
+    def to_text(self) -> str:
+        if not self.steps:
+            return self.sql
+        parts = [_PLAN_HEADER]
+        for tbl, sql in self.steps:
+            parts.append(f"{_STEP_MARK}{tbl}")
+            parts.append(sql)
+        parts.append(_MAIN_MARK)
+        parts.append(self.sql)
+        return "\n".join(parts)
+
+    @classmethod
+    def from_text(cls, text) -> "Plan":
+        if isinstance(text, Plan):
+            return text
+        if not text.startswith(_PLAN_HEADER):
+            return cls(sql=text)
+        steps: list[tuple[str, str]] = []
+        table, buf, main = None, [], None
+        for line in text.split("\n")[1:]:
+            if line.startswith(_STEP_MARK) or line == _MAIN_MARK:
+                if table is not None:
+                    steps.append((table, "\n".join(buf)))
+                table, buf = (line[len(_STEP_MARK):], []) \
+                    if line != _MAIN_MARK else (None, [])
+                if line == _MAIN_MARK:
+                    main = []
+                    buf = main
+            else:
+                buf.append(line)
+        if main is None:
+            raise ValueError("malformed plan text: missing main statement")
+        return cls(sql="\n".join(main), steps=tuple(steps))
+
+
+def _render_refs(node: E.Expr, regions, representation: str):
+    """(child, multiplicity) pairs of the table references ``node``'s
+    rendered SQL makes — the spool pass's cost model.  Overcounting is
+    harmless (a relation gets spooled that did not strictly need it);
+    undercounting re-executes a CTE under substitution semantics."""
+    if id(node) in regions:
+        return [(c, 1) for c in regions[id(node)][1]]
+    if isinstance(node, MapDeriv):
+        return [(c, 1) for c in _used_children(node)]
+    if isinstance(node, E.Softmax) and representation == "relational":
+        return [(node.x, 3)]     # row max, denominator, and the cell scan
+    if isinstance(node, E.Recurrence):
+        return [(node.a, 1), (node.b, 2)]   # b seeds the anchor AND steps
+    if isinstance(node, E.MatRecurrence) and representation == "array":
+        return [(node.a, 2), (node.b, 2)]   # anchor + recursive member
+    return [(c, 1) for c in node.children()]
+
+
+def render_plan(roots: list[E.Expr], select=None, dialect=None,
+                fuse: bool = False, spool: bool = False) -> Plan:
+    """Render a DAG as a :class:`Plan`.  With ``spool=False`` this is
+    :func:`to_sql` in a one-statement plan.  With ``spool=True`` every
+    non-leaf relation referenced >= 2 times across the statement is
+    materialised first as a ``create temp table`` step and the remaining
+    statements reference the table — on engines that flatten CTEs by
+    textual substitution (sqlite < 3.35, no MATERIALIZED hint) each
+    reference re-executes the subplan, so a shared matmul otherwise runs
+    once per consumer."""
+    dialect = _get_dialect(dialect)
+    rep = dialect.representation
+    if not spool:
+        return Plan(sql=to_sql(roots, select=select, dialect=dialect,
+                               fuse=fuse))
+    order = E.topo_order(*roots)
+    nm = assign_names(order)
+    regions, skip = fuse_dag(roots) if fuse else ({}, set())
+    nodes = [n for n in order
+             if not isinstance(n, E.Var) and id(n) not in skip]
+    refs: dict[int, int] = {}
+    for n in nodes:
+        for c, k in _render_refs(n, regions, rep):
+            if not isinstance(c, E.Var):
+                refs[id(c)] = refs.get(id(c), 0) + k
+    for r in roots:                      # the tail references each root
+        if not isinstance(r, E.Var):
+            refs[id(r)] = refs.get(id(r), 0) + 1
+    spooled = [n for n in nodes if refs.get(id(n), 0) >= 2]
+    spooled_ids = {id(n) for n in spooled}
+    sp_name = {id(n): f"_sp_{nm[id(n)]}" for n in spooled}
+
+    def member_nodes(starts, target_id=None):
+        """The nodes whose CTEs one statement needs: the render-reference
+        closure of ``starts``, stopping at leaves and at OTHER spooled
+        relations (those are plain tables by the time this runs)."""
+        seen: set[int] = set()
+
+        def visit(n):
+            if isinstance(n, E.Var) or id(n) in seen:
+                return
+            if id(n) in spooled_ids and id(n) != target_id:
+                return
+            seen.add(id(n))
+            for c, _ in _render_refs(n, regions, rep):
+                visit(c)
+
+        for s in starts:
+            visit(s)
+        return [n for n in nodes if id(n) in seen]
+
+    def statement(member, nm_use, tail):
+        ctes: list[str] = []
+        has_scan = False
+        for n in member:
+            has_scan = has_scan or isinstance(n, (E.Recurrence,
+                                                  E.MatRecurrence))
+            ctes += _node_ctes(n, nm_use, dialect, regions, rep)
+        if not ctes:
+            return f"{tail};"
+        body = ",\n".join(ctes)
+        kw = ("with recursive" if has_scan else "with") if rep == "array" \
+            else _with_keyword(dialect, recursive=has_scan)
+        return f"{kw} {body}\n{tail};"
+
+    steps: list[tuple[str, str]] = []
+    for s in spooled:
+        nm_s = dict(nm)
+        for t in spooled:
+            if t is not s:
+                nm_s[id(t)] = sp_name[id(t)]
+        tail_s = (f"select m from {nm[id(s)]}" if rep == "array"
+                  else f"select i, j, v from {nm[id(s)]}")
+        body = statement(member_nodes([s], id(s)), nm_s, tail_s)
+        steps.append((sp_name[id(s)],
+                      f"create temp table {sp_name[id(s)]} as\n{body}"))
+    nm_main = dict(nm)
+    for t in spooled:
+        nm_main[id(t)] = sp_name[id(t)]
+    if callable(select):
+        tail_main = select(nm_main)
+    elif select:
+        tail_main = select
+    elif rep == "array":
+        tail_main = f"select m from {nm_main[id(roots[-1])]}"
+    else:
+        tail_main = f"select * from {nm_main[id(roots[-1])]} order by i, j"
+    main = statement(member_nodes(roots), nm_main, tail_main)
+    return Plan(sql=main, steps=tuple(steps))
 
 
 def _training_step_parts(graph, lr: float, dialect,
@@ -768,28 +1120,16 @@ def _array_mat_scan_ctes(node: E.MatRecurrence, nm: dict[int, str]
     return [scan, _array_rows_reassembly(me)]
 
 
-def to_sql_array_ctes(roots: list[E.Expr], select=None) -> str:
+def to_sql_array_ctes(roots: list[E.Expr], select=None,
+                      fuse: bool = False) -> str:
     """Emit the array-dialect WITH query: one single-row CTE per non-leaf
     node, topologically ordered — Listing 10's named-expression reuse with
     the executable UDF spelling.  ``select`` follows the :func:`to_sql92`
     contract (string, or callable over the id→name map); the default tail
-    returns the last root's array value."""
-    order = E.topo_order(*roots)
-    nm = assign_names(order)
-    ctes: list[str] = []
-    has_scan = False
-    for node in order:
-        if isinstance(node, E.Var):
-            continue
-        if isinstance(node, E.Recurrence):
-            has_scan = True
-            ctes += _array_scan_ctes(node, nm)
-        elif isinstance(node, E.MatRecurrence):
-            has_scan = True
-            ctes += _array_mat_scan_ctes(node, nm)
-        else:
-            ctes.append(f"{nm[id(node)]}(m) as "
-                        f"(\n  select {_array_cte_sql(node, nm)} as m\n)")
+    returns the last root's array value.  ``fuse=True`` collapses
+    single-consumer elementwise chains into nested UDF calls."""
+    ctes, nm, has_scan = _render_ctes(roots, None, fuse=fuse,
+                                      representation="array")
     if callable(select):
         select = select(nm)
     tail = select or f"select m from {nm[id(roots[-1])]}"

@@ -100,6 +100,14 @@ class Adapter:
         #: ``execute`` writes are untracked: mutate matrix tables through
         #: the structured methods.)
         self.matrix_digests: dict[str, bytes] = {}
+        #: table → (representation, shape) of the matrix it stores — what
+        #: the bound-parameter delta path (``relation_io.update_matrix_*``)
+        #: checks before updating a resident relation in place
+        self.matrix_meta: dict[str, tuple] = {}
+        #: table → retained client-side copy of SMALL relational matrices
+        #: (``relation_io.DELTA_MAX_CELLS`` gate) — the diff base that turns
+        #: a leaf refresh into a prepared UPDATE of only the changed cells
+        self.matrix_cache: dict[str, np.ndarray] = {}
         #: tracer override for this connection's spans (None → the
         #: module-level active tracer, a no-op unless installed)
         self.tracer = None
@@ -170,18 +178,27 @@ class Adapter:
         return None
 
     # -- schema / data ------------------------------------------------------
+    def _invalidate(self, name: str) -> None:
+        """Forget everything cached about a matrix table — content digest,
+        shape metadata and the client-side diff copy — so any structured
+        mutation of the relation disables the unchanged-leaf skip AND the
+        bound-parameter delta path until the next full registration."""
+        self.matrix_digests.pop(name, None)
+        self.matrix_meta.pop(name, None)
+        self.matrix_cache.pop(name, None)
+
     def create_table(self, name: str, columns: Sequence[tuple[str, str]],
                      replace: bool = True) -> None:
         """``columns`` is [(col_name, sql_type), ...]."""
         _check_ident(name)
-        self.matrix_digests.pop(name, None)
+        self._invalidate(name)
         cols = ", ".join(f"{_check_ident(c)} {t}" for c, t in columns)
         if replace:
             self.execute(f"drop table if exists {name}")
         self.execute(f"create table {name} ({cols})")
 
     def bulk_insert(self, name: str, rows: Iterable[Sequence]) -> None:
-        self.matrix_digests.pop(name, None)
+        self._invalidate(name)
         rows = list(rows)
         if not rows:
             return
@@ -195,7 +212,7 @@ class Adapter:
         invalidation, array conversion, equal-length validation.  Returns
         ``(columns, n_rows)``; ``n_rows == 0`` means nothing to insert."""
         _check_ident(name)
-        self.matrix_digests.pop(name, None)
+        self._invalidate(name)
         cols = [np.asarray(c) if dtype is None else np.asarray(c, dtype)
                 for c in cols]
         n = cols[0].shape[0] if cols else 0
@@ -219,6 +236,23 @@ class Adapter:
         for s in range(0, n, CHUNK_ROWS):
             e = min(n, s + CHUNK_ROWS)
             self.executemany(sql, zip(*(c[s:e].tolist() for c in cols)))
+
+    def update_cells(self, name: str, flat_index: np.ndarray,
+                     values: np.ndarray, shape: Sequence[int]) -> None:
+        """Bound-parameter in-place update of individual matrix cells,
+        addressed by 0-based canonical row-major flat index — the prepared
+        statement behind the small-leaf delta ingestion path.  Generic
+        spelling keys on the (i, j) columns; sqlite overrides with the
+        rowid fast path."""
+        _check_ident(name)
+        self.matrix_digests.pop(name, None)
+        cols = int(shape[1])
+        i = (flat_index // cols + 1).tolist()
+        j = (flat_index % cols + 1).tolist()
+        self.executemany(
+            f"update {name} set v = {self.placeholder} where"
+            f" i = {self.placeholder} and j = {self.placeholder}",
+            zip(values.tolist(), i, j))
 
     # -- lifecycle ----------------------------------------------------------
     def commit(self) -> None:
@@ -308,7 +342,7 @@ class SQLiteAdapter(Adapter):
         import json
 
         _check_ident(name)
-        self.matrix_digests.pop(name, None)
+        self._invalidate(name)
         a = np.asarray(x, dtype=np.float64)
         if a.ndim != 2:
             raise ValueError(f"expected a matrix, got shape {a.shape}")
@@ -367,6 +401,18 @@ class SQLiteAdapter(Adapter):
                        + ", ".join([row_ph] * rem))
                 cur.execute(sql, flat[full * batch * k:])
                 self.counters["statements"] += 1
+
+    def update_cells(self, name: str, flat_index: np.ndarray,
+                     values: np.ndarray, shape: Sequence[int]) -> None:
+        """The rowid fast path: matrix tables are populated in canonical
+        row-major order (``relation_io.matrix_to_columns``) and the delta
+        path never deletes individual rows, so ``rowid == flat_index + 1``
+        — one prepared two-parameter UPDATE per changed cell, no (i, j)
+        predicate evaluation."""
+        _check_ident(name)
+        self.matrix_digests.pop(name, None)
+        self.executemany(f"update {name} set v = ? where rowid = ?",
+                         zip(values.tolist(), (flat_index + 1).tolist()))
 
 
 class DuckDBAdapter(Adapter):

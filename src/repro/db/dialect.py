@@ -44,8 +44,11 @@ actually ships):
 """
 from __future__ import annotations
 
+import base64
+import collections
 import json
 import math
+import os
 
 import numpy as np
 
@@ -65,23 +68,51 @@ except ImportError:  # pragma: no cover - exercised when duckdb is absent
 # ---------------------------------------------------------------------------
 
 def matrix_to_json(x) -> str:
-    """Encode a matrix as the array data type: row-major values + dims."""
+    """Encode a matrix as the array data type: row-major values + dims.
+    This is the STORAGE codec — what ``write_matrix_array`` puts in the
+    one-row array tables and what the documentation (paper §5) shows."""
     a = np.asarray(x, dtype=np.float64)
     return json.dumps({"r": a.shape[0], "c": a.shape[1],
                        "d": a.reshape(-1).tolist()})
 
 
-def json_to_matrix(s: str) -> np.ndarray:
+def _matrix_to_wire(x) -> str:
+    """The intra-query WIRE codec: ``b:<r>,<c>;<base64 float64 bytes>``.
+
+    UDF→UDF exchange inside one statement never touches storage, so the
+    array extension trades the human-readable JSON for a binary codec
+    there — encode/decode is a memcpy + base64 pass instead of per-float
+    text formatting, which dominated the recursive-training iteration
+    (``json.dumps``+``json.loads`` were ~80% of its wall time).  base64's
+    alphabet avoids the ``|``/``,`` separators of the scan string
+    aggregation, and ``mrowcat``'s ``split(':', 1)`` keeps the payload
+    intact.  NaN/±inf ride the IEEE bytes exactly — no printf spelling.
+    ``json_to_matrix`` sniffs the prefix and accepts both codecs."""
+    a = np.ascontiguousarray(x, dtype=np.float64)
+    return (f"b:{a.shape[0]},{a.shape[1]};"
+            + base64.b64encode(a.tobytes()).decode("ascii"))
+
+
+def json_to_matrix(s) -> np.ndarray:
+    """Decode either array codec (JSON storage or binary wire format)."""
+    if isinstance(s, bytes):
+        s = s.decode("ascii")
+    if s.startswith("b:"):
+        head, payload = s[2:].split(";", 1)
+        r, c = head.split(",")
+        a = np.frombuffer(base64.b64decode(payload), dtype=np.float64)
+        return a.reshape(int(r), int(c))
     o = json.loads(s)
     return np.asarray(o["d"], dtype=np.float64).reshape(o["r"], o["c"])
 
 
 def _wrap2(f):
-    return lambda x, y: matrix_to_json(f(json_to_matrix(x), json_to_matrix(y)))
+    return lambda x, y: _matrix_to_wire(
+        f(json_to_matrix(x), json_to_matrix(y)))
 
 
 def _wrap1(f):
-    return lambda x: matrix_to_json(f(json_to_matrix(x)))
+    return lambda x: _matrix_to_wire(f(json_to_matrix(x)))
 
 
 # -- zoo-tier array semantics (numpy twins of core.dense.eval_node) ---------
@@ -114,13 +145,13 @@ def _np_row_shift(a: np.ndarray, offset) -> np.ndarray:
 def _udf_mreduce(m: str, kind: str, axis) -> str:
     a = json_to_matrix(m)
     red = a.sum if kind == "sum" else a.max
-    return matrix_to_json(red(axis=int(axis), keepdims=True))
+    return _matrix_to_wire(red(axis=int(axis), keepdims=True))
 
 
 def _udf_msoftmax(m: str) -> str:
     a = json_to_matrix(m)
     e = np.exp(a - a.max(axis=1, keepdims=True))
-    return matrix_to_json(e / e.sum(axis=1, keepdims=True))
+    return _matrix_to_wire(e / e.sum(axis=1, keepdims=True))
 
 
 def _udf_mgather(x: str, idx: str) -> str:
@@ -129,7 +160,7 @@ def _udf_mgather(x: str, idx: str) -> str:
     if s.size and (s.min() < 0 or s.max() >= a.shape[0]):
         raise ValueError(f"mgather index out of range: valid rows "
                          f"0..{a.shape[0] - 1}")
-    return matrix_to_json(a[s])
+    return _matrix_to_wire(a[s])
 
 
 def _udf_mscatter(x: str, idx: str, n_rows) -> str:
@@ -143,19 +174,19 @@ def _udf_mscatter(x: str, idx: str, n_rows) -> str:
                          f"0..{n_rows - 1}")
     out = np.zeros((n_rows, a.shape[1]))
     np.add.at(out, s, a)
-    return matrix_to_json(out)
+    return _matrix_to_wire(out)
 
 
 def _udf_mrow(m: str, t) -> str:
     """Row ``t`` (1-based) as a (1, C) matrix — the scan CTE's state row."""
     t = int(t)
-    return matrix_to_json(json_to_matrix(m)[t - 1:t, :])
+    return _matrix_to_wire(json_to_matrix(m)[t - 1:t, :])
 
 
 def _udf_mmaxind(x: str, red: str) -> str:
     """The argmax indicator of a cached keepdims max (``ReduceDeriv``):
     broadcasting handles both axes."""
-    return matrix_to_json(
+    return _matrix_to_wire(
         (json_to_matrix(x) == json_to_matrix(red)).astype(np.float64))
 
 
@@ -172,14 +203,14 @@ def _udf_mrecurstep(a: str, s: str, b: str, t, trans) -> str:
     blk = av[(t - 1) * d:t * d, :]
     if int(trans):
         blk = blk.T
-    return matrix_to_json(sv @ blk + bv[t - 1:t, :])
+    return _matrix_to_wire(sv @ blk + bv[t - 1:t, :])
 
 
 def _udf_mstepouter(x: str, y: str) -> str:
     """The stacked per-step outer product (``StepOuter``): x (T, K),
     y (T, J) → (T·K, J) with out[(t-1)K+k, j] = x[t,k]·y[t,j]."""
     xv, yv = json_to_matrix(x), json_to_matrix(y)
-    return matrix_to_json(
+    return _matrix_to_wire(
         (xv[:, :, None] * yv[:, None, :]).reshape(-1, yv.shape[1]))
 
 
@@ -192,8 +223,13 @@ def _udf_mcellcat(concat, r, c) -> str:
     if concat:
         for tok in concat.split("|"):
             i, j, v = tok.split(",")
-            out[int(i) - 1, int(j) - 1] = float(v)
-    return matrix_to_json(out)
+            try:
+                out[int(i) - 1, int(j) - 1] = float(v)
+            except ValueError as exc:
+                raise ValueError(
+                    f"mcellcat: unparseable cell tag {tok!r} — the packed "
+                    f"codec expects '%.17g' or nan/inf spellings") from exc
+    return _matrix_to_wire(out)
 
 
 def _udf_mcell(m: str, i, j) -> float:
@@ -210,13 +246,13 @@ def _udf_mrowcat(concat) -> str:
     duckdb has no Python aggregate API, but native string aggregation +
     one scalar call it can run."""
     if concat is None:  # empty scan (never rendered, but NULL-safe)
-        return matrix_to_json(np.zeros((0, 0)))
+        return _matrix_to_wire(np.zeros((0, 0)))
     rows = []
     for tok in concat.split("|"):
         t, m = tok.split(":", 1)
         rows.append((int(t), m))
     rows.sort()
-    return matrix_to_json(np.vstack([json_to_matrix(m) for _t, m in rows]))
+    return _matrix_to_wire(np.vstack([json_to_matrix(m) for _t, m in rows]))
 
 
 #: name → (nargs, python impl).  These are the matrix operations of the
@@ -228,9 +264,9 @@ ARRAY_UDFS: dict[str, tuple[int, object]] = {
     "madd": (2, _wrap2(lambda a, b: a + b)),
     "msub": (2, _wrap2(lambda a, b: a - b)),
     "mhad": (2, _wrap2(lambda a, b: a * b)),
-    "mscale": (2, lambda c, x: matrix_to_json(c * json_to_matrix(x))),
+    "mscale": (2, lambda c, x: _matrix_to_wire(c * json_to_matrix(x))),
     "mt": (1, _wrap1(lambda a: a.T)),
-    "mconst": (3, lambda r, c, v: matrix_to_json(np.full((int(r), int(c)), v))),
+    "mconst": (3, lambda r, c, v: _matrix_to_wire(np.full((int(r), int(c)), v))),
     "mmean": (1, lambda x: float(json_to_matrix(x).mean())),
     # elementwise maps and their derivatives (Algorithm 1's f / f')
     "msig": (1, _wrap1(lambda a: 1.0 / (1.0 + np.exp(-a)))),
@@ -247,11 +283,11 @@ ARRAY_UDFS: dict[str, tuple[int, object]] = {
     # helpers of the Recurrence recursive CTE
     "mreduce": (3, _udf_mreduce),
     "msoftmax": (1, _udf_msoftmax),
-    "mtopk": (2, lambda m, k: matrix_to_json(_np_topk_mask(json_to_matrix(m),
+    "mtopk": (2, lambda m, k: _matrix_to_wire(_np_topk_mask(json_to_matrix(m),
                                                            k))),
     "mgather": (2, _udf_mgather),
     "mscatter": (3, _udf_mscatter),
-    "mrowshift": (2, lambda m, off: matrix_to_json(
+    "mrowshift": (2, lambda m, off: _matrix_to_wire(
         _np_row_shift(json_to_matrix(m), off))),
     "mrow": (2, _udf_mrow),
     "mmaxind": (2, _udf_mmaxind),
@@ -263,6 +299,85 @@ ARRAY_UDFS: dict[str, tuple[int, object]] = {
     "mcellcat": (3, _udf_mcellcat),
     "mcell": (3, _udf_mcell),
 }
+
+
+# ---------------------------------------------------------------------------
+# UDF memoization
+# ---------------------------------------------------------------------------
+#
+# ``training_query_array_calls`` inlines every shared subexpression (the
+# recursion is one query text, there is no CSE across the inlined copies),
+# so the engine evaluates the SAME pure UDF call — same name, same JSON
+# codec arguments — many times per iteration.  Every ARRAY_UDFS entry is a
+# pure function of its arguments, so a byte-bounded memo over
+# ``(name, *args)`` turns that duplication factor into cache hits.
+
+class _ByteLRU:
+    """LRU keyed on UDF call signatures, bounded by total result bytes."""
+
+    def __init__(self, max_bytes: int):
+        self.max_bytes = max_bytes
+        self._d: collections.OrderedDict = collections.OrderedDict()
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        try:
+            value, _n = self._d[key]
+        except KeyError:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return value
+
+    def put(self, key, value) -> None:
+        nbytes = len(value) if isinstance(value, str) else 8
+        if nbytes > self.max_bytes:
+            return
+        old = self._d.pop(key, None)
+        if old is not None:
+            self._bytes -= old[1]
+        self._d[key] = (value, nbytes)
+        self._bytes += nbytes
+        while self._bytes > self.max_bytes:
+            _k, (_v, n) = self._d.popitem(last=False)
+            self._bytes -= n
+
+
+_UDF_CACHE: _ByteLRU | None = None
+
+
+def _udf_cache() -> _ByteLRU | None:
+    """The process-wide UDF memo (``REPRO_UDF_CACHE_MB``, default 256;
+    0 disables).  Shared across connections — the UDFs are pure, so a
+    hit from another engine's workload is still correct."""
+    global _UDF_CACHE
+    if _UDF_CACHE is None:
+        mb = float(os.environ.get("REPRO_UDF_CACHE_MB", "256"))
+        _UDF_CACHE = _ByteLRU(int(mb * 1024 * 1024)) if mb > 0 else None
+    return _UDF_CACHE
+
+
+def _memoized(name: str, fn):
+    """Wrap a pure ARRAY_UDFS impl with the byte-bounded memo.  Results
+    are cached only on success; calls with non-scalar/str arguments (none
+    exist today) bypass the cache rather than risk an unhashable key."""
+
+    def wrapper(*args):
+        cache = _udf_cache()
+        if cache is None or not all(
+                isinstance(a, (str, int, float)) or a is None for a in args):
+            return fn(*args)
+        key = (name, *args)
+        value = cache.get(key)
+        if value is None:
+            value = fn(*args)
+            cache.put(key, value)
+        return value
+
+    return wrapper
 
 
 # ---------------------------------------------------------------------------
@@ -278,7 +393,8 @@ def _register_sqlite_udfs(conn) -> None:
     conn.create_function("exp", 1, math.exp, deterministic=True)
     conn.create_function("greatest", 2, max, deterministic=True)
     for name, (nargs, fn) in ARRAY_UDFS.items():
-        conn.create_function(name, nargs, fn, deterministic=True)
+        conn.create_function(name, nargs, _memoized(name, fn),
+                             deterministic=True)
 
 
 def _register_duckdb_udfs(conn) -> None:  # pragma: no cover - needs duckdb
@@ -306,6 +422,7 @@ def _register_duckdb_udfs(conn) -> None:  # pragma: no cover - needs duckdb
     for name, (nargs, fn) in ARRAY_UDFS.items():
         params, ret = types.get(name, ([VARCHAR] * nargs, VARCHAR)) \
             if types else (None, None)
+        fn = _memoized(name, fn)
         try:
             if params is not None:
                 conn.create_function(name, fn, params, ret)
@@ -332,6 +449,13 @@ class Sql92Dialect:
     #: codecs (``mcellcat``), stepped by ``mrecurstep`` — what the
     #: executable engines run (see ``core.sqlgen._mat_scan_ctes_packed``)
     mat_scan_rendering = "columns"
+    #: how the engine expands multiply-referenced CTEs — ``"native"``:
+    #: each CTE is evaluated once however often referenced (duckdb, and
+    #: what SQL-92 text promises); ``"substitution"``: every textual
+    #: reference re-executes the CTE body (sqlite).  Drives the default
+    #: of ``SQLEngine(spool=...)``: under substitution, shared non-leaf
+    #: nodes are materialised as temp tables before the main statement.
+    cte_materialization = "native"
 
     # -- scalar rendering ---------------------------------------------------
     def map_sql(self, fn: E.MapFn, v: str) -> str:
@@ -391,6 +515,7 @@ class SqliteDialect(Sql92Dialect):
     series_is_recursive = True
     supports_listing7 = False  # "circular reference" — see module docstring
     mat_scan_rendering = "packed"
+    cte_materialization = "substitution"
 
     def series_from(self, n: int, alias: str, col: str) -> str:
         return (f"(with recursive s(x) as"
@@ -438,6 +563,7 @@ class ArrayDialect(Sql92Dialect):
     representation = "array"
     series_is_recursive = False   # constants are mconst() calls, no series
     supports_listing7 = False     # training runs the Listing-10 recursion
+    cte_materialization = "substitution"  # rides a sqlite engine by default
 
     def prepare(self, conn) -> None:
         import sqlite3

@@ -318,6 +318,27 @@ class PlanCache:
             key, dialect.name,
             lambda: sqlgen.to_sql(roots, select=select, dialect=dialect))
 
+    def dag_plan(self, roots: list[E.Expr], dialect, tail: str = "last",
+                 fuse: bool = False, spool: bool = False) -> sqlgen.Plan:
+        """Rendered evaluation :class:`repro.core.sqlgen.Plan` (spool
+        steps + main statement) for ``roots``.  ``fuse`` and ``spool`` are
+        folded into the key alongside dialect and tail, so a fused plan is
+        never served to an unfused renderer (and vice versa) — the stored
+        value is the plan's text serialisation, shared across processes
+        like any other entry."""
+        if tail not in ("last", "multi_root"):
+            raise ValueError(f"unknown tail kind {tail!r}")
+        key = plan_key(roots, extra=(dialect.name, f"tail:{tail}",
+                                     f"fuse:{int(fuse)}",
+                                     f"spool:{int(spool)}"))
+        select = (sqlgen.multi_root_tail(roots, dialect)
+                  if tail == "multi_root" else None)
+        text = self.rendered(
+            key, dialect.name,
+            lambda: sqlgen.render_plan(roots, select=select, dialect=dialect,
+                                       fuse=fuse, spool=spool).to_text())
+        return sqlgen.Plan.from_text(text)
+
 
 _default: PlanCache | None = None
 

@@ -27,6 +27,27 @@ def _count_ingest(adapter: Adapter, a: np.ndarray) -> None:
     adapter.counters["ingest_bytes"] += int(a.nbytes)
     adapter.counters["ingest_cells"] += int(a.size)
 
+
+#: largest leaf (in cells) whose client-side copy is retained as the diff
+#: base of the bound-parameter delta path — optimizer state and per-step
+#: inputs qualify; MNIST-scale weight relations stay resident but refresh
+#: via DELETE + re-insert (no DDL churn) instead of cell updates
+DELTA_MAX_CELLS = 65536
+
+
+def _register_matrix(adapter: Adapter, name: str, a: np.ndarray,
+                     representation: str, cache: bool = True) -> None:
+    """Record what the table now holds, enabling the delta path for the
+    next refresh of the same leaf (small relational matrices additionally
+    keep a client copy to diff against)."""
+    adapter.matrix_meta[name] = (representation, a.shape)
+    if (cache and representation == "relational"
+            and 0 < a.size <= DELTA_MAX_CELLS):
+        adapter.matrix_cache[name] = a.copy()
+    else:
+        adapter.matrix_cache.pop(name, None)
+
+
 #: column layout of every matrix table, matching the paper's Fig. 1
 MATRIX_COLUMNS = (("i", "integer"), ("j", "integer"), ("v", "double precision"))
 
@@ -135,12 +156,17 @@ def write_matrix(adapter: Adapter, name: str, x) -> None:
     with tracer_of(adapter).span("io.write_matrix", table=name,
                                  cells=int(a.size)):
         adapter.create_table(name, MATRIX_COLUMNS)
-        if (getattr(adapter, "prefers_json_ingest", False) and a.ndim == 2
-                and np.isfinite(a).all()):
+        used_json = (getattr(adapter, "prefers_json_ingest", False)
+                     and a.ndim == 2 and np.isfinite(a).all())
+        if used_json:
             adapter.insert_matrix_json(name, a)
         else:
             adapter.insert_columns(name, matrix_to_columns(a))
         _count_ingest(adapter, a)
+    if a.ndim == 2:
+        # json_each values round-trip text→real (~1 ulp); the stored cells
+        # may then differ from the client copy, so no diff base is kept
+        _register_matrix(adapter, name, a, "relational", cache=not used_json)
 
 
 def write_matrix_json(adapter: Adapter, name: str, x) -> None:
@@ -177,6 +203,68 @@ def write_matrix_array(adapter: Adapter, name: str, x) -> None:
         adapter.create_table(name, ARRAY_COLUMNS)
         adapter.bulk_insert(name, [(matrix_to_json(a),)])
         _count_ingest(adapter, a)
+    if a.ndim == 2:
+        _register_matrix(adapter, name, a, "array", cache=False)
+
+
+def update_matrix_delta(adapter: Adapter, name: str, x) -> int | None:
+    """Bound-parameter in-place refresh of a RESIDENT relational matrix.
+
+    Returns the number of value bytes actually rebound, or ``None`` when
+    the relation is not resident with a matching shape (caller falls back
+    to :func:`write_matrix`).  Small leaves (``DELTA_MAX_CELLS``) diff
+    against the retained client copy and UPDATE only the changed cells
+    through one prepared statement (``adapter.update_cells``); larger
+    resident relations are rewritten in place — DELETE + re-insert keeps
+    the table object, its schema and the driver's cached INSERT statement,
+    instead of the DROP/CREATE churn of a full write."""
+    a = np.asarray(x, dtype=np.float64)
+    if a.ndim != 2 or adapter.matrix_meta.get(name) != ("relational",
+                                                        a.shape):
+        return None
+    prev = adapter.matrix_cache.get(name)
+    tr = tracer_of(adapter)
+    if prev is not None and 0 < a.size <= DELTA_MAX_CELLS:
+        # NaN compares unequal to itself, so non-finite cells always
+        # re-bind — conservative and round-trip-identical to a full write
+        changed = np.flatnonzero(a.ravel() != prev.ravel())
+        with tr.span("io.update_matrix", table=name, mode="delta",
+                     cells=int(changed.size)):
+            if changed.size:
+                adapter.update_cells(name, changed, a.ravel()[changed],
+                                     a.shape)
+        _register_matrix(adapter, name, a, "relational")
+        adapter.counters["delta_updates"] = \
+            adapter.counters.get("delta_updates", 0) + 1
+        adapter.counters["ingest_bytes"] += int(changed.size) * 8
+        adapter.counters["ingest_cells"] += int(changed.size)
+        return int(changed.size) * 8
+    with tr.span("io.update_matrix", table=name, mode="rewrite",
+                 cells=int(a.size)):
+        adapter.execute(f"delete from {_check_ident(name)}")
+        adapter.insert_columns(name, matrix_to_columns(a))
+    _register_matrix(adapter, name, a, "relational")
+    _count_ingest(adapter, a)
+    return int(a.nbytes)
+
+
+def update_matrix_array(adapter: Adapter, name: str, x) -> bool:
+    """Single-row bound-parameter refresh of an array-representation leaf
+    — ``update ... set m = ?`` against the resident row instead of
+    DROP/CREATE/INSERT.  True when the in-place update applied."""
+    a = np.asarray(x, dtype=np.float64)
+    if a.ndim != 2 or adapter.matrix_meta.get(name) != ("array", a.shape):
+        return False
+    with tracer_of(adapter).span("io.update_matrix_array", table=name,
+                                 cells=int(a.size)):
+        adapter.execute(
+            f"update {_check_ident(name)} set m = {adapter.placeholder}",
+            (matrix_to_json(a),))
+    _register_matrix(adapter, name, a, "array", cache=False)
+    adapter.counters["delta_updates"] = \
+        adapter.counters.get("delta_updates", 0) + 1
+    _count_ingest(adapter, a)
+    return True
 
 
 def read_matrix_array(adapter: Adapter, name: str) -> np.ndarray:

@@ -24,6 +24,7 @@ test rather than a silently wrong string.
 from __future__ import annotations
 
 import hashlib
+import os
 from typing import Callable
 
 import numpy as np
@@ -53,13 +54,23 @@ def _split_tagged(rows, roots: list[E.Expr]) -> list[np.ndarray]:
 
 
 def _digest(x, representation: str = "relational") -> bytes:
-    """Content digest of a leaf matrix.  The representation is folded in so
-    an adapter shared between a relational and an array engine can never
-    serve the unchanged-leaf skip across representations (the stored table
-    layouts are incompatible)."""
-    a = np.ascontiguousarray(np.asarray(x, dtype=np.float64))
-    return hashlib.sha256(a.tobytes() + repr(a.shape).encode()
-                          + representation.encode()).digest()
+    """Content digest of a leaf matrix.  Shape, source dtype AND the
+    representation are folded in next to the raw bytes: a (2,3) vs (3,2)
+    reshape, an int8 vs uint8 reinterpretation, or an adapter shared
+    between a relational and an array engine must never serve the
+    unchanged-leaf skip across such pairs (the stored relations differ
+    even when the buffer bytes agree)."""
+    raw = np.asarray(x)
+    a = np.ascontiguousarray(raw, dtype=np.float64)
+    meta = repr((a.shape, raw.dtype.str, representation)).encode()
+    return hashlib.sha256(a.tobytes() + meta).digest()
+
+
+def _env_flag(name: str, default: bool) -> bool:
+    val = os.environ.get(name)
+    if val is None:
+        return default
+    return val.strip().lower() not in ("0", "off", "false", "no", "")
 
 
 class SQLEngine:
@@ -69,7 +80,8 @@ class SQLEngine:
 
     def __init__(self, backend: str = "sqlite", path: str = ":memory:",
                  adapter: Adapter | None = None, plan_cache_=None,
-                 dialect=None, tracer=None):
+                 dialect=None, tracer=None, fuse: bool | None = None,
+                 spool: bool | None = None):
         """``plan_cache_``: a :class:`repro.db.plan_cache.PlanCache`,
         ``None`` for the shared persistent default, or ``False`` to render
         every query from scratch.
@@ -83,7 +95,14 @@ class SQLEngine:
         ``tracer``: a :class:`repro.obs.Tracer` to pin to this engine (and
         its adapter).  ``None`` (default) defers to the ambient tracer
         (:func:`repro.obs.use` / :func:`repro.obs.install`), which is a
-        zero-cost no-op unless one was installed."""
+        zero-cost no-op unless one was installed.
+
+        ``fuse``: run the :func:`repro.core.sqlgen.fuse_dag` peephole pass
+        before rendering (default on; ``REPRO_SQL_FUSE=0`` disables).
+        ``spool``: materialise multi-referenced subplans as temp tables
+        before the main statement — defaults to whether the dialect's
+        engine flattens CTEs by substitution (sqlite < 3.35 re-executes
+        every reference); ``REPRO_SQL_SPOOL`` overrides."""
         self.adapter = adapter if adapter is not None else connect(backend, path)
         if dialect is None:
             self.dialect = self.adapter.dialect
@@ -92,6 +111,15 @@ class SQLEngine:
             if self.dialect is not self.adapter.dialect:
                 self.dialect.prepare(self.adapter.conn)
         self.representation = self.dialect.representation
+        self.fuse = _env_flag("REPRO_SQL_FUSE", True) if fuse is None \
+            else bool(fuse)
+        if spool is None:
+            self.spool = _env_flag(
+                "REPRO_SQL_SPOOL",
+                getattr(self.dialect, "cte_materialization", "native")
+                == "substitution")
+        else:
+            self.spool = bool(spool)
         self.plans = plan_cache.resolve(plan_cache_)
         self.tracer = tracer
         if tracer is not None:
@@ -105,38 +133,81 @@ class SQLEngine:
         return x
 
     # -- evaluation ---------------------------------------------------------
-    def _write_env(self, roots: list[E.Expr], env: dict) -> None:
+    def _write_env(self, roots: list[E.Expr], env: dict) -> dict:
         """Materialise every free Var of the DAG as its stored relation.
         Leaves whose content digest matches what is already in the database
         are skipped — in an iteration loop only the weights move, the data
-        relations are ingested once.  Digests live on the adapter
-        (``matrix_digests``) and are invalidated by any ``create_table``
-        on the same name, so direct writes (db.train) can't go stale."""
+        relations are ingested once.  Changed leaves whose relation is
+        already resident go through the bound-parameter delta path
+        (:func:`repro.db.relation_io.update_matrix_delta` /
+        ``update_matrix_array``) instead of DROP+CREATE re-ingestion.
+        Digests live on the adapter (``matrix_digests``) and are
+        invalidated by any ``create_table`` on the same name, so direct
+        writes (db.train) can't go stale.  Returns the ingest accounting
+        the ``sql.ingest`` span reports."""
         stored = self.adapter.matrix_digests
-        write = (relation_io.write_matrix_array
-                 if self.representation == "array"
-                 else relation_io.write_matrix)
+        array_rep = self.representation == "array"
+        info = {"leaves": 0, "skipped": 0, "delta_updates": 0,
+                "bytes_written": 0, "bytes_saved": 0}
         for v in E.free_vars(*roots):
             if v.name not in env:
                 raise KeyError(f"env missing leaf table {v.name!r}")
-            d = _digest(env[v.name], self.representation)
+            raw = env[v.name]
+            info["leaves"] += 1
+            d = _digest(raw, self.representation)
+            a = np.ascontiguousarray(np.asarray(raw, dtype=np.float64))
             if stored.get(v.name) == d:
+                info["skipped"] += 1
+                info["bytes_saved"] += a.nbytes
                 continue
-            write(self.adapter, v.name, env[v.name])
+            stored.pop(v.name, None)
+            if array_rep:
+                if relation_io.update_matrix_array(self.adapter, v.name, a):
+                    info["delta_updates"] += 1
+                else:
+                    relation_io.write_matrix_array(self.adapter, v.name, a)
+                info["bytes_written"] += a.nbytes
+            else:
+                written = relation_io.update_matrix_delta(
+                    self.adapter, v.name, a)
+                if written is None:
+                    relation_io.write_matrix(self.adapter, v.name, a)
+                    info["bytes_written"] += a.nbytes
+                else:
+                    info["delta_updates"] += 1
+                    info["bytes_written"] += written
+                    info["bytes_saved"] += a.nbytes - written
             stored[v.name] = d
+        return info
 
-    def _render(self, roots: list[E.Expr]) -> str:
-        """Multi-root WITH query via the plan cache (or direct on miss)."""
+    def _render(self, roots: list[E.Expr]) -> sqlgen.Plan:
+        """Multi-root evaluation plan via the plan cache (or direct on
+        miss): spool steps first, then the main WITH query."""
         if self.plans is not None:
-            return self.plans.dag_sql(roots, self.dialect, tail="multi_root")
-        return sqlgen.to_sql(roots,
-                             select=sqlgen.multi_root_tail(roots, self.dialect),
-                             dialect=self.dialect)
+            return self.plans.dag_plan(roots, self.dialect,
+                                       tail="multi_root", fuse=self.fuse,
+                                       spool=self.spool)
+        return sqlgen.render_plan(
+            roots, select=sqlgen.multi_root_tail(roots, self.dialect),
+            dialect=self.dialect, fuse=self.fuse, spool=self.spool)
 
     def _plan_key(self, roots: list[E.Expr]) -> str:
-        """The cache key ``evaluate`` queries run under (multi-root tail)."""
+        """The cache key ``evaluate`` queries run under (multi-root tail).
+        The fuse/spool renderer switches are part of the key — a cached
+        fused plan is never served to an unfused engine or vice versa."""
         return plan_cache.plan_key(
-            roots, extra=(self.dialect.name, "tail:multi_root"))
+            roots, extra=(self.dialect.name, "tail:multi_root",
+                          f"fuse:{int(self.fuse)}",
+                          f"spool:{int(self.spool)}"))
+
+    def _run_plan(self, plan: sqlgen.Plan):
+        """Execute a plan's spool steps (drop + create temp table — temp
+        relations persist on the connection across evaluations) and then
+        the main statement, returning its rows."""
+        for table, sql in plan.steps:
+            self.adapter.execute(f"drop table if exists {table}")
+            self.adapter.execute(sql)
+        return self.adapter.execute(plan.sql)
 
     def _ensure_explained(self, key: str, sql: str) -> None:
         """Capture the engine's EXPLAIN output for a cached plan, once.
@@ -155,14 +226,15 @@ class SQLEngine:
         """The engine's plan for this DAG (EXPLAIN QUERY PLAN on sqlite,
         EXPLAIN on duckdb).  Leaf tables must exist — evaluate the DAG (or
         call after a training run) first; returns ``''`` where the engine
-        cannot explain the query."""
-        sql = self._render(roots)
+        cannot explain the query.  Spooled plans explain the main
+        statement (temp tables exist once the DAG has been evaluated)."""
+        plan = self._render(roots)
         if self.plans is not None:
             key = self._plan_key(roots)
-            self._ensure_explained(key, sql)
+            self._ensure_explained(key, plan.sql)
             return self.plans.get_explain(key) or ""
         try:
-            return self.adapter.explain_sql(sql)
+            return self.adapter.explain_sql(plan.sql)
         except Exception:
             return ""
 
@@ -199,25 +271,29 @@ class SQLEngine:
         tr = tracer_of(self, self.adapter)
         if not tr.enabled:
             self._write_env(roots, env)
-            rows = self.adapter.execute(self._render(roots))
+            rows = self._run_plan(self._render(roots))
             return self._decode(rows, roots)
         with tr.span("sql.evaluate", **self._root_attrs(roots)) as root_sp:
             bytes0 = self.adapter.db_bytes()
-            with tr.span("sql.ingest"):
-                self._write_env(roots, env)
+            with tr.span("sql.ingest") as ing_sp:
+                ing_sp.set(**self._write_env(roots, env))
             hits0 = self.plans.hits if self.plans is not None else 0
             with tr.span("sql.render") as sp:
-                sql = self._render(roots)
+                plan = self._render(roots)
                 if self.plans is not None:
                     sp.set(cache="hit" if self.plans.hits > hits0 else "miss")
+            for table, sql in plan.steps:      # spool before EXPLAIN — the
+                self.adapter.execute(f"drop table if exists {table}")
+                self.adapter.execute(sql)      # main stmt names the tables
             if self.plans is not None:
                 with tr.span("sql.explain"):
-                    self._ensure_explained(self._plan_key(roots), sql)
-            rows = self.adapter.execute(sql)
+                    self._ensure_explained(self._plan_key(roots), plan.sql)
+            rows = self.adapter.execute(plan.sql)
             with tr.span("sql.decode"):
                 outs = self._decode(rows, roots)
             bytes1 = self.adapter.db_bytes()
             root_sp.set(rows_returned=len(rows),
+                        spool_steps=len(plan.steps),
                         db_bytes=(None if bytes0 is None or bytes1 is None
                                   else bytes1 - bytes0))
             return outs
@@ -226,25 +302,30 @@ class SQLEngine:
         """Evaluator with the Engine.eval_fn contract (no jit — the
         "compilation" is the SQL rendering, done once here and reused from
         the plan cache across topologically identical graphs)."""
-        sql = self._render(roots)
+        plan = self._render(roots)
         explained = [self.plans is None]  # explain once, after tables exist
 
         def fn(env: dict) -> list[np.ndarray]:
             tr = tracer_of(self, self.adapter)
             if not tr.enabled:
                 self._write_env(roots, env)
-                return self._decode(self.adapter.execute(sql), roots)
+                return self._decode(self._run_plan(plan), roots)
             with tr.span("sql.evaluate", **self._root_attrs(roots)) as root_sp:
-                with tr.span("sql.ingest"):
-                    self._write_env(roots, env)
+                with tr.span("sql.ingest") as ing_sp:
+                    ing_sp.set(**self._write_env(roots, env))
+                for table, sql in plan.steps:
+                    self.adapter.execute(f"drop table if exists {table}")
+                    self.adapter.execute(sql)
                 if not explained[0]:
                     with tr.span("sql.explain"):
-                        self._ensure_explained(self._plan_key(roots), sql)
+                        self._ensure_explained(self._plan_key(roots),
+                                               plan.sql)
                     explained[0] = True
-                rows = self.adapter.execute(sql)
+                rows = self.adapter.execute(plan.sql)
                 with tr.span("sql.decode"):
                     outs = self._decode(rows, roots)
-                root_sp.set(rows_returned=len(rows))
+                root_sp.set(rows_returned=len(rows),
+                            spool_steps=len(plan.steps))
                 return outs
 
         return fn

@@ -1,0 +1,45 @@
+with z_xh(m) as (
+  select mm((select m from img), (select m from w_xh)) as m
+),
+a_xh(m) as (
+  select msig((select m from z_xh)) as m
+),
+z_ho(m) as (
+  select mm((select m from a_xh), (select m from w_ho)) as m
+),
+a_ho(m) as (
+  select msig((select m from z_ho)) as m
+),
+diff(m) as (
+  select msub((select m from a_ho), (select m from one_hot)) as m
+),
+loss(m) as (
+  select msqr((select m from diff)) as m
+),
+t_c0(m) as (
+  select mt((select m from img)) as m
+),
+had_c3(m) as (
+  select mhad(mhad(mconst(4,2,1.0), msqrd((select m from diff))), msigd((select m from a_ho))) as m
+),
+t_c4(m) as (
+  select mt((select m from w_ho)) as m
+),
+mm_c5(m) as (
+  select mm((select m from had_c3), (select m from t_c4)) as m
+),
+had_c6(m) as (
+  select mhad((select m from mm_c5), msigd((select m from a_xh))) as m
+),
+mm_c7(m) as (
+  select mm((select m from t_c0), (select m from had_c6)) as m
+),
+t_c8(m) as (
+  select mt((select m from a_xh)) as m
+),
+mm_c9(m) as (
+  select mm((select m from t_c8), (select m from had_c3)) as m
+)
+select 0 as r, m from loss
+union all select 1 as r, m from mm_c7
+union all select 2 as r, m from mm_c9;

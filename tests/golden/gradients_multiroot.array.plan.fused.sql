@@ -1,0 +1,59 @@
+-- repro:plan v1
+-- repro:step _sp_a_xh
+create temp table _sp_a_xh as
+with z_xh(m) as (
+  select mm((select m from img), (select m from w_xh)) as m
+),
+a_xh(m) as (
+  select msig((select m from z_xh)) as m
+)
+select m from a_xh;
+-- repro:step _sp_a_ho
+create temp table _sp_a_ho as
+with z_ho(m) as (
+  select mm((select m from _sp_a_xh), (select m from w_ho)) as m
+),
+a_ho(m) as (
+  select msig((select m from z_ho)) as m
+)
+select m from a_ho;
+-- repro:step _sp_diff
+create temp table _sp_diff as
+with diff(m) as (
+  select msub((select m from _sp_a_ho), (select m from one_hot)) as m
+)
+select m from diff;
+-- repro:step _sp_had_c3
+create temp table _sp_had_c3 as
+with had_c3(m) as (
+  select mhad(mhad(mconst(4,2,1.0), msqrd((select m from _sp_diff))), msigd((select m from _sp_a_ho))) as m
+)
+select m from had_c3;
+-- repro:main
+with loss(m) as (
+  select msqr((select m from _sp_diff)) as m
+),
+t_c0(m) as (
+  select mt((select m from img)) as m
+),
+t_c4(m) as (
+  select mt((select m from w_ho)) as m
+),
+mm_c5(m) as (
+  select mm((select m from _sp_had_c3), (select m from t_c4)) as m
+),
+had_c6(m) as (
+  select mhad((select m from mm_c5), msigd((select m from _sp_a_xh))) as m
+),
+mm_c7(m) as (
+  select mm((select m from t_c0), (select m from had_c6)) as m
+),
+t_c8(m) as (
+  select mt((select m from _sp_a_xh)) as m
+),
+mm_c9(m) as (
+  select mm((select m from t_c8), (select m from _sp_had_c3)) as m
+)
+select 0 as r, m from loss
+union all select 1 as r, m from mm_c7
+union all select 2 as r, m from mm_c9;

@@ -1,0 +1,64 @@
+with z_xh(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from img as m inner join w_xh as n on m.j = n.i
+  group by m.i, n.j
+),
+a_xh(i, j, v) as (
+  select f0.i, f0.j, (1/(1+exp(-f0.v))) as v
+  from z_xh as f0
+),
+z_ho(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from a_xh as m inner join w_ho as n on m.j = n.i
+  group by m.i, n.j
+),
+a_ho(i, j, v) as (
+  select f0.i, f0.j, (1/(1+exp(-f0.v))) as v
+  from z_ho as f0
+),
+diff(i, j, v) as (
+  select f0.i, f0.j, (f0.v - f1.v) as v
+  from a_ho as f0
+  inner join one_hot as f1 on f1.i = f0.i and f1.j = f0.j
+),
+loss(i, j, v) as (
+  select f0.i, f0.j, (f0.v*f0.v) as v
+  from diff as f0
+),
+t_c0(i, j, v) as (
+  select j as i, i as j, v from img
+),
+had_c3(i, j, v) as (
+  select f0.i, f0.j, ((1.0 * (2 * f0.v)) * (f1.v * (1 - f1.v))) as v
+  from diff as f0
+  inner join a_ho as f1 on f1.i = f0.i and f1.j = f0.j
+),
+t_c4(i, j, v) as (
+  select j as i, i as j, v from w_ho
+),
+mm_c5(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from had_c3 as m inner join t_c4 as n on m.j = n.i
+  group by m.i, n.j
+),
+had_c6(i, j, v) as (
+  select f0.i, f0.j, (f0.v * (f1.v * (1 - f1.v))) as v
+  from mm_c5 as f0
+  inner join a_xh as f1 on f1.i = f0.i and f1.j = f0.j
+),
+mm_c7(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from t_c0 as m inner join had_c6 as n on m.j = n.i
+  group by m.i, n.j
+),
+t_c8(i, j, v) as (
+  select j as i, i as j, v from a_xh
+),
+mm_c9(i, j, v) as (
+  select m.i, n.j, sum(m.v*n.v) as v
+  from t_c8 as m inner join had_c3 as n on m.j = n.i
+  group by m.i, n.j
+)
+select 0 as r, i, j, v from loss
+union all select 1 as r, i, j, v from mm_c7
+union all select 2 as r, i, j, v from mm_c9;

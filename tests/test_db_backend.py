@@ -344,6 +344,29 @@ class TestSQLEngineDifferential:
         probs3, = eng.evaluate([g.a_ho], {**w0, "img": x})
         np.testing.assert_allclose(probs3, probs1, atol=1e-12)
 
+    def test_leaf_digest_separates_shape_and_dtype(self):
+        """Same bytes, different logical matrix: a (2,3) float64 buffer
+        reshaped to (3,2), or reinterpreted from another dtype, must never
+        satisfy the unchanged-leaf skip."""
+        from repro.db.sql_engine import _digest
+        a = np.arange(6, dtype=np.float64).reshape(2, 3)
+        assert _digest(a, "relational") != _digest(a.reshape(3, 2),
+                                                   "relational")
+        assert _digest(a, "relational") != _digest(
+            a.astype(np.float32), "relational")
+        assert _digest(a, "relational") != _digest(a, "array")
+        # engine level: a reshaped leaf is re-ingested, not skipped
+        eng = SQLEngine(plan_cache_=False)
+        v23 = E.var("r23", (2, 3))
+        v32 = E.var("r32", (3, 2))
+        out1, = eng.evaluate([v23], {"r23": a})
+        np.testing.assert_allclose(out1, a)
+        eng.adapter.matrix_digests["r32"] = \
+            eng.adapter.matrix_digests["r23"]  # simulate a digest collision
+        out2, = eng.evaluate([v32], {"r32": a.reshape(3, 2)})
+        eng.close()
+        np.testing.assert_allclose(out2, a.reshape(3, 2))
+
     def test_sgd_step_fn_surface(self):
         g, w0, x, y, _ = mlp()
         step = sgd_step_fn(g.loss, [g.w_xh, g.w_ho], g.spec.lr, Engine("sql"))

@@ -1,0 +1,158 @@
+"""The elementwise CTE-fusion pass and the spooled evaluation plan.
+
+Differential guarantee: for every dialect, a fused (and, under
+substitution CTE semantics, spooled) plan computes the same values as the
+unfused rendering within 1e-4 — over seeded random elementwise-heavy DAGs
+with fan-out and over the MLP forward/backward graph.  Structural
+guarantees: fusion never duplicates a multi-consumer subexpression, and
+the plan-cache key separates fused from unfused renderings.
+"""
+import numpy as np
+import pytest
+
+from repro.core import nn2sql, sqlgen
+from repro.core import expr as E
+from repro.core.autodiff import gradients
+from repro.db import HAVE_DUCKDB
+from repro.db.plan_cache import PlanCache, plan_key
+from repro.db.sql_engine import SQLEngine
+
+TOL = 1e-4
+
+#: dialect → engine kwargs; sql92 renders generate_series so it needs the
+#: duckdb engine (CI); sqlite and array always run
+ENGINES = {
+    "sqlite": dict(backend="sqlite"),
+    "array": dict(backend="sqlite", dialect="array"),
+    "duckdb": dict(backend="duckdb"),
+    "sql92": dict(backend="duckdb", dialect="sql92"),
+}
+DIALECTS = sorted(ENGINES)
+
+
+def _engine(dialect, **kw):
+    if ENGINES[dialect].get("backend") == "duckdb" and not HAVE_DUCKDB:
+        pytest.skip("duckdb not importable")
+    return SQLEngine(plan_cache_=False, **ENGINES[dialect], **kw)
+
+
+def random_elementwise_dag(seed, n_ops=9):
+    """A seeded DAG mixing matmuls with elementwise chains; drawing
+    operands from the whole pool produces genuine fan-out (nodes with
+    several consumers) so absorption limits are exercised."""
+    rng = np.random.RandomState(seed)
+    x = E.var("fx", (5, 4))
+    w = E.var("fw", (4, 4))
+    pool = [E.matmul(x, w)]
+    unary = [E.sigmoid, E.relu, E.square,
+             lambda a: E.scale(float(rng.uniform(-2, 2)), a)]
+    binary = [E.add, E.sub, E.hadamard]
+    for _ in range(n_ops):
+        if rng.rand() < 0.55:
+            pool.append(unary[rng.randint(len(unary))](
+                pool[rng.randint(len(pool))]))
+        else:
+            a = pool[rng.randint(len(pool))]
+            b = pool[rng.randint(len(pool))]
+            pool.append(binary[rng.randint(len(binary))](a, b))
+    # two roots so multi-root fan-out counting is exercised as well
+    return [pool[-1], pool[rng.randint(len(pool))]], {
+        "fx": rng.randn(5, 4), "fw": rng.randn(4, 4)}
+
+
+def mlp_roots():
+    g = nn2sql.build_graph(nn2sql.MLPSpec(6, 5, 4, 3, lr=0.05))
+    grads = gradients(g.loss, [g.w_xh, g.w_ho])
+    rng = np.random.RandomState(7)
+    env = {"img": rng.rand(6, 5), "one_hot": np.eye(3)[rng.randint(0, 3, 6)],
+           "w_xh": rng.randn(5, 4) * 0.3, "w_ho": rng.randn(4, 3) * 0.3}
+    return [g.loss, grads[g.w_xh], grads[g.w_ho]], env
+
+
+def _evaluate(dialect, roots, env, **kw):
+    eng = _engine(dialect, **kw)
+    try:
+        return eng.evaluate(roots, env)
+    finally:
+        eng.close()
+
+
+class TestDifferential:
+    @pytest.mark.parametrize("dialect", DIALECTS)
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_random_dags_fused_matches_unfused(self, dialect, seed):
+        roots, env = random_elementwise_dag(seed)
+        base = _evaluate(dialect, roots, env, fuse=False, spool=False)
+        fused = _evaluate(dialect, roots, env, fuse=True, spool=False)
+        both = _evaluate(dialect, roots, env, fuse=True, spool=True)
+        for b, f, s in zip(base, fused, both):
+            np.testing.assert_allclose(f, b, atol=TOL)
+            np.testing.assert_allclose(s, b, atol=TOL)
+
+    @pytest.mark.parametrize("dialect", DIALECTS)
+    def test_mlp_forward_backward_fused_matches_unfused(self, dialect):
+        roots, env = mlp_roots()
+        base = _evaluate(dialect, roots, env, fuse=False, spool=False)
+        fused = _evaluate(dialect, roots, env, fuse=True, spool=True)
+        for b, f in zip(base, fused):
+            np.testing.assert_allclose(f, b, atol=TOL)
+
+
+class TestStructure:
+    def test_multi_consumer_subexpression_not_duplicated(self):
+        """``h`` feeds two elementwise consumers: it must survive as its
+        own CTE (referenced by name), never be inlined into both."""
+        x, w = E.var("x", (3, 3)), E.var("w", (3, 3))
+        h = E.sigmoid(E.matmul(x, w), name="h")
+        roots = [E.add(E.square(h), E.relu(h))]
+        sql = sqlgen.to_sql(roots, dialect="sqlite", fuse=True)
+        assert "h(i, j, v) as" in sql
+        # the sigmoid body renders exactly once despite two consumers
+        assert sql.count("exp(") == 1
+
+    def test_single_consumer_chain_collapses(self):
+        x, w = E.var("x", (3, 3)), E.var("w", (3, 3))
+        chain = E.scale(2.0, E.relu(E.square(E.sigmoid(E.matmul(x, w)))))
+        fused = sqlgen.to_sql([chain], dialect="sqlite", fuse=True)
+        unfused = sqlgen.to_sql([chain], dialect="sqlite", fuse=False)
+        # four elementwise CTEs collapse into the one fused root CTE
+        assert fused.count(") as (") == unfused.count(") as (") - 3
+
+    def test_fuse_dag_respects_roots(self):
+        """A query root is never absorbed into its consumer — its relation
+        must exist for the result decode."""
+        x = E.var("x", (2, 2))
+        a = E.sigmoid(x, name="a")
+        b = E.square(a, name="b")
+        regions, skip = sqlgen.fuse_dag([a, b])
+        assert id(a) not in skip
+
+    def test_plan_text_round_trip(self):
+        roots, _env = mlp_roots()
+        plan = sqlgen.render_plan(
+            roots, select=sqlgen.multi_root_tail(roots, "sqlite"),
+            dialect="sqlite", fuse=True, spool=True)
+        assert plan.steps, "MLP backward has shared intermediates to spool"
+        back = sqlgen.Plan.from_text(plan.to_text())
+        assert back == plan
+
+
+class TestPlanKeys:
+    def test_fused_and_unfused_never_share_a_key(self):
+        roots, _env = mlp_roots()
+        keys = {plan_key(roots, extra=("sqlite", "tail:multi_root",
+                                       f"fuse:{int(f)}", f"spool:{int(s)}"))
+                for f in (0, 1) for s in (0, 1)}
+        assert len(keys) == 4
+
+    def test_engine_plan_keys_distinguish_renderers(self):
+        roots, env = mlp_roots()
+        cache = PlanCache(path=None)
+        e1 = SQLEngine(plan_cache_=cache, fuse=False, spool=False)
+        e2 = SQLEngine(plan_cache_=cache, fuse=True, spool=True)
+        r1 = e1.evaluate(roots, env)
+        r2 = e2.evaluate(roots, env)
+        e1.close(), e2.close()
+        assert cache.misses == 2 and cache.hits == 0
+        for a, b in zip(r1, r2):
+            np.testing.assert_allclose(a, b, atol=TOL)

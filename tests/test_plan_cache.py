@@ -276,6 +276,27 @@ class TestLRUCap:
         assert pc2.get("hot") == "select 'hot';"
         pc2.close()
 
+    def test_disk_loaded_hit_updates_recency_before_prune(self, tmp_path):
+        """Regression: a hit served from the persistent layer by a FRESH
+        process (nothing in the memory layer yet) must count as a use —
+        the next at-cap insert prunes by ``last_used``, and a disk-loaded
+        hot key must outlive entries that were merely written later."""
+        p = str(tmp_path / "plans.db")
+        cap = 2
+        pc = PlanCache(path=p, cap=cap)
+        pc.put("a", "select 'a';")
+        pc.put("b", "select 'b';")        # disk: a (colder), b (warmer)
+        pc.close()
+        pc2 = PlanCache(path=p, cap=cap)  # fresh session, empty mem layer
+        assert pc2.get("a") == "select 'a';"   # disk hit → a is now hottest
+        pc2.put("c", "select 'c';")       # at cap: prune must drop b, not a
+        pc2.close()
+        pc3 = PlanCache(path=p, cap=cap)
+        assert pc3.get("a") == "select 'a';"
+        assert pc3.get("c") == "select 'c';"
+        assert pc3.get("b") is None
+        pc3.close()
+
     def test_cap_env_override_and_default(self, monkeypatch):
         assert PlanCache(path=None).cap == 512
         monkeypatch.setenv("REPRO_PLAN_CACHE_CAP", "17")
@@ -408,11 +429,15 @@ class TestCachedDifferential:
         orig = eng.adapter.insert_columns
         eng.adapter.insert_columns = (
             lambda name, cols: (writes.append(name), orig(name, cols)))
+        orig_upd = eng.adapter.update_cells
+        eng.adapter.update_cells = (
+            lambda name, *a, **k: (writes.append(name),
+                                   orig_upd(name, *a, **k)))
         fn(env)                      # identical env — no table rewritten
         assert writes == []
         env2 = dict(env, w_xh=env["w_xh"] + 1.0)
-        fn(env2)                     # only the changed leaf is rewritten
-        assert writes == ["w_xh"]
+        fn(env2)                     # only the changed leaf is touched —
+        assert writes == ["w_xh"]    # via bound-parameter deltas or rewrite
 
     def test_train_in_db_rendering_cached(self, tmp_path, monkeypatch):
         monkeypatch.setenv("REPRO_PLAN_CACHE",

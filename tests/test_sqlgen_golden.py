@@ -47,6 +47,20 @@ def multi(roots, dialect):
                          dialect=dialect)
 
 
+def fused(roots, dialect):
+    """The same statement with the elementwise fusion pass on."""
+    return sqlgen.to_sql(roots, select=sqlgen.multi_root_tail(roots, dialect),
+                         dialect=dialect, fuse=True)
+
+
+def fused_spooled_plan(roots, dialect):
+    """The full evaluation plan (spool steps + main statement) the engine
+    runs under substitution CTE semantics, serialised."""
+    return sqlgen.render_plan(
+        roots, select=sqlgen.multi_root_tail(roots, dialect),
+        dialect=dialect, fuse=True, spool=True).to_text()
+
+
 CASES = {
     # Listing 5: constant matrix via a series cross join
     "listing5_const.sql92":
@@ -90,6 +104,22 @@ CASES = {
     # array representation to the Listing-10 array-calls rendering)
     "listing10_training.array":
         lambda: sqlgen.training_query(graph(), 10, SPEC.lr, "array"),
+    # the elementwise-fusion pass: chains of Map/Add/Sub/Hadamard/Scale
+    # collapse into single CTE expressions (every dialect), and the
+    # substitution-semantics engines additionally spool multi-referenced
+    # intermediates into temp-table steps (plan serialisation snapshot)
+    "gradients_multiroot.sql92.fused":
+        lambda: fused(grad_roots(), "sql92"),
+    "gradients_multiroot.sqlite.fused":
+        lambda: fused(grad_roots(), "sqlite"),
+    "gradients_multiroot.duckdb.fused":
+        lambda: fused(grad_roots(), "duckdb"),
+    "gradients_multiroot.array.fused":
+        lambda: fused(grad_roots(), "array"),
+    "gradients_multiroot.sqlite.plan.fused":
+        lambda: fused_spooled_plan(grad_roots(), "sqlite"),
+    "gradients_multiroot.array.plan.fused":
+        lambda: fused_spooled_plan(grad_roots(), "array"),
 }
 
 

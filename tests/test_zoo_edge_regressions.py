@@ -183,3 +183,69 @@ class TestSoftmaxOverflow:
         for i, j, v in conn.execute(sql.rstrip(";")).fetchall():
             out[int(i) - 1, int(j) - 1] = v
         np.testing.assert_allclose(out, self.stable_ref(self.X), atol=TOL)
+
+
+class TestNonFiniteScanStates:
+    """The packed scan codec (``mat_scan_rendering = "packed"``) carries
+    cells as ``printf('%d,%d,%.17g', i, j, v)`` tags — but sqlite stores a
+    bound NaN as NULL and printf renders NULL as 0, silently zeroing the
+    cell.  The tag now spells non-finite cells explicitly (``nan`` /
+    ``Inf``), consistent with how the VALUES ingest gate and the result
+    decoder treat them (NULL ⇄ NaN), so non-finite state propagates
+    through the scan exactly as dense arithmetic would."""
+
+    T, D = 3, 3
+
+    def _roots_env(self):
+        a = E.var("nfa", (self.T * self.D, self.D))
+        b = E.var("nfb", (self.T, self.D))
+        av = np.tile(np.eye(self.D), (self.T, 1))   # s_t = s_{t-1} + b_t
+        bv = np.zeros((self.T, self.D))
+        # non-finite cells enter at the LAST step: a matmul over a row
+        # holding nan/inf drowns every later column (nan·0 = inf·0 = nan),
+        # which would test IEEE mixing rather than the codec round trip
+        bv[2] = [np.nan, np.inf, -np.inf]
+        return [E.mat_recurrence(a, b)], {"nfa": av, "nfb": bv}
+
+    def test_mat_recurrence_propagates_non_finite(self):
+        roots, env = self._roots_env()
+        s = np.zeros(self.D)
+        rows = []
+        for t in range(self.T):
+            s = s @ env["nfa"][t * self.D:(t + 1) * self.D] + env["nfb"][t]
+            rows.append(s)
+        want = np.stack(rows)
+        for label, backend, dialect in ENGINES:
+            with SQLEngine(backend=backend, dialect=dialect,
+                           plan_cache_=False) as eng:
+                got, = eng.evaluate(roots, env)
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"{label} lost a non-finite state cell")
+
+    def test_recurrence_propagates_non_finite(self):
+        a = E.var("ra", (3, 2))
+        b = E.var("rb", (3, 2))
+        env = {"ra": np.ones((3, 2)),
+               "rb": np.array([[np.nan, 1.0], [np.inf, 2.0],
+                               [3.0, -np.inf]])}
+        want = np.array([[np.nan, 1.0], [np.nan, 3.0], [np.nan, -np.inf]])
+        for label, backend, dialect in ENGINES:
+            with SQLEngine(backend=backend, dialect=dialect,
+                           plan_cache_=False) as eng:
+                got, = eng.evaluate([E.recurrence(a, b)], env)
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"{label} lost a non-finite state cell")
+
+    def test_wire_codec_round_trips_non_finite(self):
+        from repro.db.dialect import _matrix_to_wire
+
+        a = np.array([[np.nan, np.inf], [-np.inf, 0.0]])
+        np.testing.assert_array_equal(json_to_matrix(_matrix_to_wire(a)), a)
+        np.testing.assert_array_equal(json_to_matrix(matrix_to_json(a)), a)
+
+    def test_mcellcat_rejects_garbage_tags(self):
+        from repro.db.dialect import ARRAY_UDFS
+
+        _nargs, mcellcat = ARRAY_UDFS["mcellcat"]
+        with pytest.raises(ValueError, match="unparseable cell tag"):
+            mcellcat("1,1,0xQQ", 1, 1)

@@ -36,6 +36,7 @@ try:
 except ImportError:  # pragma: no cover - package mode
     from .common import timeit
 from repro import obs
+from repro.obs import regress
 from repro.core import Engine, nn2sql
 from repro.core import expr as E
 from repro.core.autodiff import gradients
@@ -185,13 +186,23 @@ def main():
         "array_beats_relational_mlp_grad":
             by_name["mlp_forward_grad"]["speedup_array"] > 1.0,
     }
+    metrics = {}
+    for r in results:
+        wl = r["workload"]
+        metrics[f"{wl}.relational_s"] = regress.metric(r["relational_s"])
+        metrics[f"{wl}.array_s"] = regress.metric(r["array_s"])
+        metrics[f"{wl}.speedup_array"] = regress.metric(
+            r["speedup_array"], "x", "higher")
     report = {"backend": backend, "have_duckdb": HAVE_DUCKDB,
               "mlp_config": {"rows": args.rows, "features": args.features,
                              "hidden": args.hidden, "classes": args.classes},
               "results": results,
               "trace": {"stage_totals": obs.summarize(tracer, top=12),
                         "evaluate": obs.stage_breakdown(
-                            tracer, root="sql.evaluate")},
+                            tracer, root="sql.evaluate"),
+                        "evaluate_ms_hist":
+                            tracer.histograms.get("sql.evaluate_ms", {})},
+              "metrics": metrics,
               "checks": checks}
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)

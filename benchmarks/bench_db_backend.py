@@ -14,6 +14,7 @@ Run:  PYTHONPATH=src python benchmarks/bench_db_backend.py [--rows 60]
 Perfetto-loadable Chrome trace.)
 """
 import argparse
+import json
 import time
 
 import numpy as np
@@ -21,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.obs import regress
 from repro.core import Engine, nn2sql, sgd_step_fn
 from repro.db import HAVE_DUCKDB
 from repro.db.train import train_in_db
@@ -44,6 +46,10 @@ def main():
     ap.add_argument("--trace-out", default=None,
                     help="capture the in-DB runs with the repro.obs tracer "
                          "and write a Chrome/Perfetto trace here")
+    ap.add_argument("--out", default=None,
+                    help="also write the timing table as a JSON report "
+                         "with a normalised 'metrics' block "
+                         "(benchmarks/check_regression.py input)")
     args = ap.parse_args()
 
     spec = nn2sql.MLPSpec(n_rows=args.rows, n_features=4,
@@ -100,6 +106,30 @@ def main():
     print(f"{'benchmark':46s} {'median ms':>10s}")
     for name, t in rows:
         print(f"{name:46s} {t * 1e3:10.2f}")
+
+    if args.out:
+        slug = {f"value_and_grad[{k}]": f"value_and_grad.{k}_s"
+                for k in ("dense", "relational", "sql")}
+        slug.update({
+            f"train[dense, {args.iters} it]": "train.dense_s",
+            f"train[relational, {args.iters} it]": "train.relational_s",
+            f"train[sqlite recursive-CTE, {args.iters} it]":
+                "train.sqlite_recursive_s",
+            f"train[sqlite stepped Listing-7, {args.iters} it]":
+                "train.sqlite_stepped_s",
+            f"train[duckdb Listing-7, {args.iters} it]":
+                "train.duckdb_s",
+        })
+        report = {
+            "config": {"rows": args.rows, "hidden": args.hidden,
+                       "iters": args.iters, "have_duckdb": HAVE_DUCKDB},
+            "timings": {name: t for name, t in rows},
+            "metrics": {slug[name]: regress.metric(t)
+                        for name, t in rows if name in slug},
+        }
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.out}")
 
     if args.trace_out:
         tracer = obs.Tracer()

@@ -35,6 +35,7 @@ try:
 except ImportError:  # pragma: no cover - package mode
     from .common import timeit
 from repro import obs
+from repro.obs import regress
 from repro.db import HAVE_DUCKDB, zoo
 from repro.db.sql_engine import SQLEngine
 from repro.nn import ssm
@@ -212,6 +213,13 @@ def main():
               "trace": {"stage_totals": obs.summarize(tracer, top=12),
                         "scan_chunks": obs.stage_breakdown(
                             tracer, root="zoo.ssd_scan")},
+              "metrics": {
+                  "ssd.relational_s": regress.metric(ssd["relational_s"]),
+                  "ssd.array_s": regress.metric(ssd["array_s"]),
+                  "lru.relational_s": regress.metric(lru["relational_s"]),
+                  "lru.array_s": regress.metric(lru["array_s"]),
+                  "lru.grads_s": regress.metric(lru["grads_s"]),
+              },
               "checks": {"ssd_within_1e-4": ssd["within_tol"],
                          "lru_within_1e-4": lru["within_tol"]}}
     with open(args.out, "w") as f:

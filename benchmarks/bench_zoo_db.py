@@ -33,6 +33,7 @@ try:
 except ImportError:  # pragma: no cover - package mode
     from .common import timeit
 from repro import obs
+from repro.obs import regress
 from repro.db import HAVE_DUCKDB, zoo
 from repro.db.sql_engine import SQLEngine
 from repro.kernels import ref
@@ -176,6 +177,11 @@ def main():
               "moe": moe, "rwkv": rwkv,
               "trace": {"stage_totals": obs.summarize(tracer, top=12),
                         "zoo_layers": obs.stage_breakdown(tracer)},
+              "metrics": {
+                  "moe.layer_sql_s": regress.metric(moe["layer_sql_s"]),
+                  "rwkv.time_mix_sql_s":
+                      regress.metric(rwkv["time_mix_sql_s"]),
+              },
               "checks": {"moe_within_1e-4": moe["within_tol"],
                          "rwkv_within_1e-4": rwkv["within_tol"]}}
     with open(args.out, "w") as f:

@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""The CI perf-regression gate over committed ``BENCH_*.json`` baselines.
+
+Two modes:
+
+``--baseline B.json --fresh F.json`` (repeatable)
+    Compare explicit report pairs — both directions gated: a slower time
+    OR a collapsed speedup beyond the tolerance band fails.  This is the
+    mode for like-for-like runs (same problem sizes).
+
+``--smoke``
+    Re-run the two headline benchmarks at CI-friendly reduced sizes
+    (seconds, not minutes) and compare against the committed full-scale
+    baselines.  Only ``lower``-is-better metrics (absolute times) are
+    gated: the smoke problem is strictly smaller, so a fresh time
+    exceeding the full-scale baseline by the tolerance factor means a
+    genuine engine-level slowdown, while derived ratios (speedups,
+    attribution fractions) legitimately shrink at toy sizes and are
+    reported informationally only.
+
+Exit status 0 = no regression; 1 = at least one metric regressed (or a
+baseline headline metric disappeared).  ``--out PREFIX`` additionally
+writes ``PREFIX.md`` / ``PREFIX.json`` — the delta table CI uploads as an
+artifact.
+
+    python benchmarks/check_regression.py --smoke --out perf_delta
+    python benchmarks/check_regression.py \
+        --baseline BENCH_db_mnist.json --fresh /tmp/fresh_mnist.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(ROOT, "src")):
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.obs import regress  # noqa: E402
+
+#: smoke mode: (committed baseline at repo root, benchmark argv tail)
+SMOKE = (
+    ("BENCH_db_mnist.json",
+     ["benchmarks/bench_mnist_db.py", "--rows", "8", "--hidden", "32",
+      "--iters", "1", "--timing-iters", "1", "--curve", "1,2"]),
+    ("BENCH_array_vs_rel.json",
+     ["benchmarks/bench_array_vs_relational.py", "--rows", "8",
+      "--features", "64", "--hidden", "16", "--tokens", "8", "--seq", "6",
+      "--timing-iters", "1"]),
+)
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _smoke_run(script_args: list[str], out_path: str) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, script_args[0], *script_args[1:],
+           "--out", out_path]
+    subprocess.run(cmd, cwd=ROOT, env=env, check=True,
+                   stdout=subprocess.DEVNULL)
+    return _load(out_path)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", action="append", default=[],
+                    help="committed baseline report (pairs with --fresh)")
+    ap.add_argument("--fresh", action="append", default=[],
+                    help="freshly produced report to judge")
+    ap.add_argument("--smoke", action="store_true",
+                    help="re-run headline benchmarks at reduced size and "
+                         "gate absolute times against committed baselines")
+    ap.add_argument("--tolerance", type=float, default=1.5,
+                    help="regression band: fail beyond this factor "
+                         "(default 1.5x)")
+    ap.add_argument("--out", default=None,
+                    help="write PREFIX.md / PREFIX.json delta artifacts")
+    args = ap.parse_args(argv)
+    if len(args.baseline) != len(args.fresh):
+        ap.error("--baseline and --fresh must pair up")
+    if not args.smoke and not args.baseline:
+        ap.error("nothing to do: pass --smoke and/or --baseline/--fresh")
+
+    sections = []            # (title, deltas)
+    for b_path, f_path in zip(args.baseline, args.fresh):
+        deltas = regress.compare(_load(b_path), _load(f_path),
+                                 tolerance=args.tolerance)
+        sections.append((f"{os.path.basename(b_path)} vs "
+                         f"{os.path.basename(f_path)}", deltas))
+
+    if args.smoke:
+        with tempfile.TemporaryDirectory() as tmp:
+            for base_name, script_args in SMOKE:
+                base_path = os.path.join(ROOT, base_name)
+                fresh = _smoke_run(
+                    script_args,
+                    os.path.join(tmp, "fresh_" + base_name))
+                deltas = regress.compare(
+                    _load(base_path), fresh, tolerance=args.tolerance,
+                    gate_directions=("lower",), fail_on_missing=False)
+                sections.append((f"{base_name} (smoke, times only)",
+                                 deltas))
+
+    failed = False
+    tables = []
+    for title, deltas in sections:
+        tables.append(regress.delta_table(deltas, title=title))
+        failed = failed or any(d.failed for d in deltas)
+    report = "\n\n".join(tables)
+    print(report)
+    verdict = "REGRESSION DETECTED" if failed else "no regressions"
+    print(f"\nperf gate: {verdict} "
+          f"(tolerance {args.tolerance:g}x, {len(sections)} comparisons)")
+
+    if args.out:
+        with open(args.out + ".md", "w") as f:
+            f.write("# Perf-regression gate\n\n```\n" + report
+                    + f"\n```\n\nverdict: **{verdict}**\n")
+        with open(args.out + ".json", "w") as f:
+            json.dump({
+                "failed": failed,
+                "tolerance": args.tolerance,
+                "sections": [{
+                    "title": title,
+                    "deltas": [vars(d) for d in deltas],
+                } for title, deltas in sections],
+            }, f, indent=2, sort_keys=True)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

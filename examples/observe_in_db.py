@@ -10,8 +10,14 @@ same SQL surface that trained the model.
 
 Also shows ``SQLEngine.stats`` (plan-cache hit/miss/eviction counters —
 the LRU no longer evicts silently), the engine's EXPLAIN output for the
-cached plan, and the Chrome-trace export (load the JSON at
-https://ui.perfetto.dev).
+cached plan, the Chrome-trace export (load the JSON at
+https://ui.perfetto.dev), the per-IR-node profiled execution mode
+(``SQLEngine.profile_value_and_grad`` → ``profile_nodes`` relation), the
+``metric_points`` time-series (training loss, grad norm, cache hit rate),
+and the one-command terminal report over either artifact::
+
+    python -m repro.obs.report observe_in_db.trace.json
+    python -m repro.obs.report observe_in_db.sqlite
 
 Run:  PYTHONPATH=src python examples/observe_in_db.py
 """
@@ -76,9 +82,35 @@ def main():
     for line in eng.explain([graph.loss]).splitlines()[:6]:
         print("  " + line)
 
-    # -- 5. Perfetto-loadable export -----------------------------------------
+    # -- 5. per-IR-node profile: every node its own timed temp-table step ----
+    res = eng.profile_value_and_grad(graph.loss, [graph.w_xh, graph.w_ho],
+                                     {**weights, "img": x, "one_hot": y})
+    print(f"\nprofiled training-step DAG "
+          f"({res.attribution:.1%} of wall attributed):")
+    print(res.report(top=8))
+    obs.write_profile_nodes(adapter, res)
+    print("\ncost by IR node kind, via SQL on profile_nodes:")
+    for kind, n_, ms, rows, pct in adapter.execute(obs.NODE_SQL)[:5]:
+        print(f"  {kind:<22s} n={int(n_):<3d} {ms:8.3f} ms  {pct:5.1f}%")
+
+    # -- 6. the metric_points time-series lands in the database too ----------
+    n = obs.write_metric_points(adapter, tracer)
+    print(f"\nwrote {n} metric points — per-metric summary via SQL:")
+    for metric, cnt, lo, hi, mean in adapter.execute(obs.METRIC_SQL):
+        print(f"  {metric:<22s} n={int(cnt):<4d} mean={mean:.4g} "
+              f"[{lo:.4g}, {hi:.4g}]")
+    h = tracer.histograms.get("db.execute_ms")
+    if h:
+        print(f"db.execute_ms histogram: n={h['count']} "
+              f"p50={h['p50']:.3f} p95={h['p95']:.3f} p99={h['p99']:.3f} ms")
+
+    # -- 7. Perfetto-loadable export + the terminal report CLI ---------------
     path = obs.write_chrome_trace(tracer, "observe_in_db.trace.json")
     print(f"\nChrome trace written to {path} (open in ui.perfetto.dev)")
+    print("inspect either artifact with: "
+          "python -m repro.obs.report observe_in_db.trace.json")
+    from repro.obs import report as obs_report
+    print("\n" + obs_report.render(obs_report.load_capture(path), top=5))
     eng.close()
 
 

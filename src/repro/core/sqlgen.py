@@ -696,15 +696,18 @@ def _render_refs(node: E.Expr, regions, representation: str):
 
 
 def render_plan(roots: list[E.Expr], select=None, dialect=None,
-                fuse: bool = False, spool: bool = False) -> Plan:
+                fuse: bool = False, spool: bool = False,
+                spool_threshold: int = 2) -> Plan:
     """Render a DAG as a :class:`Plan`.  With ``spool=False`` this is
     :func:`to_sql` in a one-statement plan.  With ``spool=True`` every
-    non-leaf relation referenced >= 2 times across the statement is
-    materialised first as a ``create temp table`` step and the remaining
-    statements reference the table — on engines that flatten CTEs by
-    textual substitution (sqlite < 3.35, no MATERIALIZED hint) each
+    non-leaf relation referenced >= ``spool_threshold`` times across the
+    statement is materialised first as a ``create temp table`` step and the
+    remaining statements reference the table — on engines that flatten CTEs
+    by textual substitution (sqlite < 3.35, no MATERIALIZED hint) each
     reference re-executes the subplan, so a shared matmul otherwise runs
-    once per consumer."""
+    once per consumer.  ``spool_threshold=1`` spools *every* non-leaf node
+    (one step per IR node) — the per-node profiled execution mode of
+    :mod:`repro.obs.profiler`."""
     dialect = _get_dialect(dialect)
     rep = dialect.representation
     if not spool:
@@ -723,7 +726,7 @@ def render_plan(roots: list[E.Expr], select=None, dialect=None,
     for r in roots:                      # the tail references each root
         if not isinstance(r, E.Var):
             refs[id(r)] = refs.get(id(r), 0) + 1
-    spooled = [n for n in nodes if refs.get(id(n), 0) >= 2]
+    spooled = [n for n in nodes if refs.get(id(n), 0) >= spool_threshold]
     spooled_ids = {id(n) for n in spooled}
     sp_name = {id(n): f"_sp_{nm[id(n)]}" for n in spooled}
 

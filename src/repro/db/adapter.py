@@ -151,6 +151,7 @@ class Adapter:
             self.counters["rows_returned"] += len(rows)
             if tr.enabled:
                 sp.set(sql=" ".join(sql[:SQL_HEAD].split()), rows=len(rows))
+                tr.observe("db.execute_ms", dt * 1e3)
             self._finish_stmt(sql, dt, tr)
         return rows
 

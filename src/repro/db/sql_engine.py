@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import hashlib
 import os
+import time
 from typing import Callable
 
 import numpy as np
@@ -124,6 +125,7 @@ class SQLEngine:
         self.tracer = tracer
         if tracer is not None:
             self.adapter.tracer = tracer
+        self._eval_steps = 0      # traced-evaluation counter (metric_points)
 
     # -- representation conversion (Engine-compatible no-ops) ---------------
     def lift(self, x):
@@ -261,6 +263,23 @@ class SQLEngine:
             "representation": self.representation,
         }
 
+    def _record_eval_metrics(self, tr, dt_s: float, ingest: dict) -> None:
+        """Per-evaluation telemetry on a collecting tracer: the latency
+        histogram plus the ``metric_points`` time-series entries (plan-cache
+        hit rate, bytes ingested) the regression/report layer reads."""
+        self._eval_steps += 1
+        step = self._eval_steps
+        tr.observe("sql.evaluate_ms", dt_s * 1e3)
+        tr.point("sql.evaluate_ms", dt_s * 1e3, step=step,
+                 dialect=self.dialect.name)
+        if ingest.get("bytes_written"):
+            tr.point("sql.ingest_bytes", ingest["bytes_written"], step=step)
+        if self.plans is not None:
+            seen = self.plans.hits + self.plans.misses
+            if seen:
+                tr.point("plan_cache.hit_rate", self.plans.hits / seen,
+                         step=step)
+
     def evaluate(self, roots: list[E.Expr], env: dict) -> list[np.ndarray]:
         """One round trip: write leaves, run ONE multi-root query, read back.
 
@@ -273,10 +292,12 @@ class SQLEngine:
             self._write_env(roots, env)
             rows = self._run_plan(self._render(roots))
             return self._decode(rows, roots)
+        t_eval0 = time.perf_counter()
         with tr.span("sql.evaluate", **self._root_attrs(roots)) as root_sp:
             bytes0 = self.adapter.db_bytes()
             with tr.span("sql.ingest") as ing_sp:
-                ing_sp.set(**self._write_env(roots, env))
+                ingest = self._write_env(roots, env)
+                ing_sp.set(**ingest)
             hits0 = self.plans.hits if self.plans is not None else 0
             with tr.span("sql.render") as sp:
                 plan = self._render(roots)
@@ -296,6 +317,8 @@ class SQLEngine:
                         spool_steps=len(plan.steps),
                         db_bytes=(None if bytes0 is None or bytes1 is None
                                   else bytes1 - bytes0))
+            self._record_eval_metrics(tr, time.perf_counter() - t_eval0,
+                                      ingest)
             return outs
 
     def eval_fn(self, roots: list[E.Expr]) -> Callable:
@@ -310,9 +333,11 @@ class SQLEngine:
             if not tr.enabled:
                 self._write_env(roots, env)
                 return self._decode(self._run_plan(plan), roots)
+            t_eval0 = time.perf_counter()
             with tr.span("sql.evaluate", **self._root_attrs(roots)) as root_sp:
                 with tr.span("sql.ingest") as ing_sp:
-                    ing_sp.set(**self._write_env(roots, env))
+                    ingest = self._write_env(roots, env)
+                    ing_sp.set(**ingest)
                 for table, sql in plan.steps:
                     self.adapter.execute(f"drop table if exists {table}")
                     self.adapter.execute(sql)
@@ -326,6 +351,8 @@ class SQLEngine:
                     outs = self._decode(rows, roots)
                 root_sp.set(rows_returned=len(rows),
                             spool_steps=len(plan.steps))
+                self._record_eval_metrics(tr, time.perf_counter() - t_eval0,
+                                          ingest)
                 return outs
 
         return fn
@@ -337,11 +364,36 @@ class SQLEngine:
         roots = [loss] + [grads[v] for v in wrt]
         fn = self.eval_fn(roots)
 
+        steps = [0]
+
         def vg(env: dict):
             outs = fn(env)
+            tr = tracer_of(self, self.adapter)
+            if tr.enabled:        # the training curve, straight off the DAG
+                steps[0] += 1
+                tr.point("train.loss", float(np.mean(outs[0])),
+                         step=steps[0])
+                gn = float(np.sqrt(sum(float(np.sum(g * g))
+                                       for g in outs[1:])))
+                tr.point("train.grad_norm", gn, step=steps[0])
             return outs[0], {v.name: g for v, g in zip(wrt, outs[1:])}
 
         return vg
+
+    # -- profiled execution mode --------------------------------------------
+    def profile(self, roots: list[E.Expr], env: dict):
+        """Profiled evaluation: same outputs as :meth:`evaluate`, plus a
+        per-IR-node cost table (:class:`repro.obs.profiler.ProfileResult`)
+        — every non-leaf node runs as its own timed temp-table step."""
+        from ..obs import profiler
+        return profiler.profile_evaluate(self, roots, env)
+
+    def profile_value_and_grad(self, loss: E.Expr, wrt: list[E.Var],
+                               env: dict):
+        """Profile the loss + Algorithm-1 gradient DAG — the exact
+        multi-root query one ``train.in_db`` iteration executes."""
+        from ..obs import profiler
+        return profiler.profile_value_and_grad(self, loss, wrt, env)
 
     # -- introspection ------------------------------------------------------
     @property

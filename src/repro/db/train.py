@@ -28,6 +28,7 @@ Inference (Listing 8/11) runs the forward CTEs in-database, including the
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -159,8 +160,14 @@ def _train_stepped(graph, weights, x, y_onehot, n_iters,
         cache, graph.spec.lr)
 
     def step(_state, _it):
+        t0 = time.perf_counter()
         with tr.span("train.step", iter=_it):
             adapter.execute(step_sql)
+        if tr.enabled:
+            dt = time.perf_counter() - t0
+            tr.observe("train.step_ms", dt * 1e3)
+            tr.point("train.step_ms", dt * 1e3, step=_it,
+                     strategy="stepped")
         return _state
 
     recursive_cte_py(None, step, n_iters)
@@ -241,10 +248,20 @@ def train_in_db(graph, weights, x, y_onehot, n_iters: int, *,
 
     tr = tracer_of(adapter)
     try:
+        t0 = time.perf_counter()
         with tr.span("train.in_db", strategy=strategy,
                      representation=representation, n_iters=n_iters,
                      backend=adapter.dialect.name):
-            return dispatch()
+            res = dispatch()
+        if tr.enabled:       # the run's metric_points time-series entries
+            dt = time.perf_counter() - t0
+            tr.point("train.iter_ms", dt * 1e3 / max(n_iters, 1),
+                     step=n_iters, strategy=res.strategy)
+            tr.point("train.cte_bytes", res.cte_bytes, step=n_iters)
+            cells = adapter.counters.get("ingest_cells")
+            if cells:
+                tr.point("train.rows_ingested", cells, step=n_iters)
+        return res
     finally:
         if owned:
             adapter.close()
@@ -300,8 +317,12 @@ def loss_trajectory_in_db(graph, history, x, y_onehot, *,
     try:
         eng = SQLEngine(adapter=adapter)
         fn = eng.eval_fn([graph.loss])
-        losses = [float(np.mean(fn({**w, "img": x, "one_hot": y_onehot})[0]))
-                  for w in history]
+        tr = tracer_of(adapter)
+        losses = []
+        for k, w in enumerate(history):
+            loss = float(np.mean(fn({**w, "img": x, "one_hot": y_onehot})[0]))
+            losses.append(loss)
+            tr.point("train.loss", loss, step=k, source="trajectory")
         return np.asarray(losses)
     finally:
         if owned:

@@ -9,6 +9,17 @@ and the exporters turn the capture into a Chrome-trace/Perfetto JSON or a
 ``trace_spans`` relation *inside the traced database* — engine telemetry
 you query with SQL, like everything else in this repo.
 
+Beyond spans: :mod:`~repro.obs.metrics` adds log-spaced-bucket histograms
+(``tracer.observe`` — p50/p95/p99 with no per-sample storage) and the
+``metric_points`` time-series relation (``tracer.point`` — training loss,
+gradient norm, cache hit rate, tokens/s); :mod:`~repro.obs.profiler` is
+the per-IR-node profiled execution mode (``SQLEngine.profile`` — every
+node its own timed temp-table step, emitted as a ``profile_nodes``
+relation); :mod:`~repro.obs.regress` compares benchmark ``metrics`` blocks
+against committed baselines (the CI perf gate); ``python -m
+repro.obs.report`` prints all of it from a trace JSON or a traced
+database.
+
 Zero-cost by default: the active tracer is a no-op singleton until
 :func:`install`/:func:`use` swaps a collecting one in (or an engine is
 constructed with ``tracer=...``).
@@ -19,11 +30,21 @@ constructed with ``tracer=...``).
         eng.evaluate([root], env)           # spans collected everywhere
     obs.write_chrome_trace(tracer, "trace.json")
     obs.write_trace_spans(eng.adapter, tracer)   # → SQL-queryable relation
+    obs.write_metric_points(eng.adapter, tracer)
     print(obs.stage_breakdown(tracer, root="sql.evaluate"))
+    print(eng.profile([root], env).report(top=10))
 """
 from .export import (STAGE_SQL, TRACE_SPAN_COLUMNS, chrome_trace,
                      stage_breakdown, summarize, write_chrome_trace,
                      write_trace_spans)
+from .metrics import (METRIC_POINT_COLUMNS, METRIC_SQL, Histogram,
+                      MetricPoint, percentiles_from_values,
+                      write_metric_points)
+from .profiler import (NODE_SQL, PROFILE_NODE_COLUMNS, NodeCost,
+                       ProfileResult, profile_evaluate,
+                       profile_value_and_grad, write_profile_nodes)
+from .regress import (Delta, compare, delta_table, metric,
+                      metrics_from_report)
 from .tracer import (NOOP_SPAN, NullTracer, Span, Tracer, current, install,
                      tracer_of, use)
 
@@ -32,4 +53,10 @@ __all__ = [
     "current", "install", "use", "tracer_of",
     "chrome_trace", "write_chrome_trace", "write_trace_spans",
     "summarize", "stage_breakdown", "STAGE_SQL", "TRACE_SPAN_COLUMNS",
+    "Histogram", "MetricPoint", "write_metric_points",
+    "percentiles_from_values", "METRIC_SQL", "METRIC_POINT_COLUMNS",
+    "NodeCost", "ProfileResult", "profile_evaluate",
+    "profile_value_and_grad", "write_profile_nodes",
+    "NODE_SQL", "PROFILE_NODE_COLUMNS",
+    "Delta", "compare", "delta_table", "metric", "metrics_from_report",
 ]

@@ -74,7 +74,13 @@ def chrome_trace(tracer) -> dict:
     counters = tracer.counters
     gauges = tracer.gauges
     return {"traceEvents": events, "displayTimeUnit": "ms",
-            "otherData": {"counters": counters, "gauges": gauges}}
+            "otherData": {"counters": counters, "gauges": gauges,
+                          "histograms": tracer.histograms,
+                          "metricPoints": [
+                              {"seq": p.seq, "t_us": round(p.t * 1e6, 3),
+                               "metric": p.metric, "step": p.step,
+                               "value": p.value, "labels": p.labels}
+                              for p in tracer.points]}}
 
 
 def write_chrome_trace(tracer, path: str) -> str:

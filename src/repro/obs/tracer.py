@@ -10,7 +10,11 @@ attribution.  This module is the instrument panel:
     thread-local stack keeps nesting per thread; finished spans land in one
     shared list under a lock) and carry free-form attributes set at open
     (``tracer.span("db.execute", sql=head)``) or later (``sp.set(rows=n)``).
-    Counters and gauges ride the same object (``inc`` / ``gauge``).
+    Counters and gauges ride the same object (``inc`` / ``gauge``), as do
+    log-spaced-bucket histograms (``observe`` — p50/p95/p99 with no
+    per-sample storage) and the ``metric_points`` time-series (``point`` —
+    training loss, tokens/s, cache hit rate; see
+    :mod:`repro.obs.metrics`).
 
 ``NullTracer``
     The zero-cost default.  ``span()`` returns a shared no-op singleton
@@ -33,15 +37,24 @@ import threading
 import time
 from contextlib import contextmanager
 
+from . import metrics as _metrics
+
 
 class Span:
     """One timed, attributed interval.  Context manager: entering records
     the start time and the position in the per-thread span stack (parent
     linkage + slash-joined ``path``); exiting records the end time and
-    appends the finished span to the tracer's shared list."""
+    appends the finished span to the tracer's shared list.
+
+    Exit is exception-safe: a raise inside the ``with`` closes the span
+    with ``error``/``exc_type`` attributes, and any *abandoned* descendant
+    still sitting on the thread-local stack (a span opened inside this one
+    whose ``__exit__`` never ran — e.g. a generator torn down mid-flight)
+    is force-closed and exported too, so one failed query can never leave
+    the stack dirty for the next call."""
 
     __slots__ = ("tracer", "name", "attrs", "span_id", "parent_id", "path",
-                 "t0", "t1", "tid")
+                 "t0", "t1", "tid", "_closed")
 
     def __init__(self, tracer: "Tracer", name: str, attrs: dict):
         self.tracer = tracer
@@ -53,6 +66,7 @@ class Span:
         self.t0 = None
         self.t1 = None
         self.tid = None
+        self._closed = False
 
     def set(self, **attrs) -> "Span":
         """Attach attributes to an open (or finished) span."""
@@ -80,14 +94,43 @@ class Span:
         self.t0 = tr._clock()
         return self
 
-    def __exit__(self, *exc) -> bool:
+    def _close(self, now) -> None:
+        """Finalise once: stamp the end time and publish to the shared
+        list.  Idempotent — a span force-closed during an enclosing span's
+        abnormal unwind must not re-export if its own ``__exit__`` runs
+        later out of order."""
+        if self._closed:
+            return
+        self._closed = True
+        if self.t1 is None:
+            self.t1 = now
+        with self.tracer._lock:
+            self.tracer.spans.append(self)
+
+    def __exit__(self, exc_type=None, exc=None, tb=None) -> bool:
+        if self._closed:
+            return False
         tr = self.tracer
-        self.t1 = tr._clock()
+        now = tr._clock()
+        self.t1 = now
+        if exc_type is not None:
+            self.attrs.setdefault("error", True)
+            self.attrs.setdefault("exc_type", exc_type.__name__)
         stack = tr._stack()
-        if stack and stack[-1] is self:
-            stack.pop()
-        with tr._lock:
-            tr.spans.append(self)
+        # pop self — and close any abandoned descendants above it first,
+        # marking them so the export shows where the unwind cut through.
+        # (If self is not on this thread's stack at all, leave it alone.)
+        if any(s is self for s in stack):
+            while stack:
+                top = stack.pop()
+                if top is self:
+                    break
+                top.attrs.setdefault("abandoned", True)
+                if exc_type is not None:
+                    top.attrs.setdefault("error", True)
+                    top.attrs.setdefault("exc_type", exc_type.__name__)
+                top._close(now)
+        self._close(now)
         return False
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -130,6 +173,12 @@ class NullTracer:
     def gauge(self, name: str, value) -> None:
         pass
 
+    def observe(self, name: str, value) -> None:
+        pass
+
+    def point(self, metric: str, value, step=None, **labels) -> None:
+        pass
+
     def current_path(self) -> str:
         return ""
 
@@ -143,6 +192,14 @@ class NullTracer:
     @property
     def gauges(self) -> dict:
         return {}
+
+    @property
+    def histograms(self) -> dict:
+        return {}
+
+    @property
+    def points(self) -> tuple:
+        return ()
 
 
 class Tracer(NullTracer):
@@ -159,6 +216,8 @@ class Tracer(NullTracer):
         self.spans: list[Span] = []
         self._counters: dict[str, float] = {}
         self._gauges: dict[str, float] = {}
+        self._hists: dict[str, _metrics.Histogram] = {}
+        self._points: list[_metrics.MetricPoint] = []
 
     # -- spans --------------------------------------------------------------
     def _stack(self) -> list:
@@ -194,14 +253,53 @@ class Tracer(NullTracer):
         with self._lock:
             return dict(self._gauges)
 
+    # -- histograms / time-series -------------------------------------------
+    def observe(self, name: str, value) -> None:
+        """Feed one sample into the named log-spaced-bucket histogram
+        (:class:`repro.obs.metrics.Histogram` — p50/p95/p99 with no
+        per-sample storage)."""
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                h = self._hists[name] = _metrics.Histogram()
+            h.observe(value)
+
+    def point(self, metric: str, value, step=None, **labels) -> None:
+        """Append one time-series observation (training loss, tokens/s,
+        cache hit rate …).  ``step`` is the caller's iteration counter;
+        timestamps use the tracer clock so points align with spans."""
+        with self._lock:
+            self._points.append(_metrics.MetricPoint(
+                seq=len(self._points), t=self._clock(), metric=metric,
+                step=step, value=float(value), labels=labels))
+
+    def histogram(self, name: str) -> _metrics.Histogram | None:
+        """The live histogram object (None if nothing observed yet)."""
+        with self._lock:
+            return self._hists.get(name)
+
+    @property
+    def histograms(self) -> dict:
+        """Snapshot per metric: count/sum/min/max/mean/p50/p90/p95/p99."""
+        with self._lock:
+            return {k: h.snapshot() for k, h in sorted(self._hists.items())}
+
+    @property
+    def points(self) -> list:
+        with self._lock:
+            return list(self._points)
+
     # -- lifecycle ----------------------------------------------------------
     def clear(self) -> None:
-        """Drop finished spans, counters and gauges (open spans keep their
-        stack so an enclosing ``with`` still closes cleanly)."""
+        """Drop finished spans, counters, gauges, histograms and metric
+        points (open spans keep their stack so an enclosing ``with`` still
+        closes cleanly)."""
         with self._lock:
             self.spans = []
             self._counters = {}
             self._gauges = {}
+            self._hists = {}
+            self._points = []
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,7 @@ serves every request mix.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
@@ -44,6 +45,7 @@ class ServingEngine:
         self.cache = model.init_cache(batch_slots, max_len)
         self.cur_token = np.zeros((batch_slots, 1), np.int32)
         self._decode = jax.jit(model.decode_step)
+        self._steps = 0            # traced decode steps (metric_points)
         #: optional pinned :class:`repro.obs.Tracer`; ``None`` defers to
         #: the ambient tracer (no-op unless installed)
         self.tracer = None
@@ -90,6 +92,7 @@ class ServingEngine:
     def step(self) -> list[Request]:
         """One decode step for all active slots; returns finished requests."""
         tr = tracer_of(self)
+        t0 = time.perf_counter()
         with tr.span("serve.step") as sp:
             self._admit()
             n_active = sum(r is not None for r in self.active)
@@ -116,6 +119,12 @@ class ServingEngine:
             tr.inc("serve.decode_tokens", n_active)
             if tr.enabled:
                 sp.set(active=n_active, finished=len(finished), pos=pos)
+                dt = time.perf_counter() - t0
+                self._steps += 1
+                tr.observe("serve.step_ms", dt * 1e3)
+                if dt > 0:
+                    tr.point("serve.tokens_per_s", n_active / dt,
+                             step=self._steps, active=n_active)
             return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:

@@ -23,8 +23,11 @@ SRC = pathlib.Path(__file__).parent.parent / "src" / "repro"
 EXEC_CALL = re.compile(r"conn\.(execute|executemany|cursor)\s*\(")
 EXEMPT = re.compile(r"#\s*obs:\s*exempt\s*(—|-)\s*\S")
 
-#: the only modules allowed to touch a raw DB-API connection
-ALLOWED_RAW = {"db/adapter.py", "db/plan_cache.py"}
+#: the only modules allowed to touch a raw DB-API connection —
+#: obs/report.py is the offline capture viewer: it opens a *finished*
+#: trace database read-only, so there is no live engine whose spans,
+#: counters or slow-query log it could bypass
+ALLOWED_RAW = {"db/adapter.py", "db/plan_cache.py", "obs/report.py"}
 
 
 def _functions_with_source(path: pathlib.Path):

@@ -9,7 +9,7 @@ Two modes:
     mode for like-for-like runs (same problem sizes).
 
 ``--smoke``
-    Re-run the two headline benchmarks at CI-friendly reduced sizes
+    Re-run the headline benchmarks at CI-friendly reduced sizes
     (seconds, not minutes) and compare against the committed full-scale
     baselines.  Only ``lower``-is-better metrics (absolute times) are
     gated: the smoke problem is strictly smaller, so a fresh time
@@ -51,6 +51,10 @@ SMOKE = (
      ["benchmarks/bench_array_vs_relational.py", "--rows", "8",
       "--features", "64", "--hidden", "16", "--tokens", "8", "--seq", "6",
       "--timing-iters", "1"]),
+    ("BENCH_serving_db.json",
+     ["benchmarks/bench_serving_db.py", "--counts", "1,2,8",
+      "--requests", "24", "--clients", "4", "--timing-iters", "2",
+      "--min-speedup", "2.0"]),
 )
 
 

@@ -228,6 +228,148 @@ def _cte_sql(node: E.Expr, nm: dict[int, str], dialect) -> str:
     raise TypeError(type(node))
 
 
+# ---------------------------------------------------------------------------
+# batched rendering: one plan, B independent requests (multi-tenant serving)
+# ---------------------------------------------------------------------------
+#
+# A *batched* relation carries a leading ``b`` request-index column next to
+# the cell tuple — ``{[b, i, j, v]}`` relational, ``(b, m)`` array — so ONE
+# rendered statement evaluates the same DAG for B independent leaf
+# environments.  Batched-ness flows from the batched leaf Vars through every
+# rendered reference; constants and shared leaves (weights) stay unbatched
+# and broadcast through the joins, which is what keeps the rendered text
+# free of any literal B: the same cached plan serves B = 1, a ragged last
+# micro-batch, and B = 64 alike (the batch size lives in the leaf DATA).
+
+def batched_ids(roots: list[E.Expr], batch_vars) -> frozenset:
+    """ids of the nodes whose rendered relation carries the batch column:
+    a Var named in ``batch_vars``, or any node one of whose *rendered*
+    references (:func:`_used_children`) is batched.  The scans cannot ride
+    a batch column (their recursion walks t, not b) — batching one raises."""
+    bt: set[int] = set()
+    if not batch_vars:
+        return frozenset()
+    for node in E.topo_order(*roots):
+        if isinstance(node, E.Var):
+            if node.name in batch_vars:
+                bt.add(id(node))
+        elif any(id(c) in bt for c in _used_children(node)):
+            if isinstance(node, (E.Recurrence, E.MatRecurrence)):
+                raise NotImplementedError(
+                    f"{type(node).__name__} cannot carry a batch column; "
+                    f"keep scan inputs out of the batched leaf set")
+            bt.add(id(node))
+    return frozenset(bt)
+
+
+def _cte_sql_b(node: E.Expr, nm: dict[int, str], dialect, bt) -> str:
+    """Batched relational rendering of one node (:func:`_cte_sql`'s twin):
+    the output carries a leading ``b``; a batched child contributes it, an
+    unbatched child broadcasts (no ``b`` predicate on its join leg)."""
+    n = lambda c: nm[id(c)]
+    isb = lambda c: id(c) in bt
+    if isinstance(node, E.MatMul):
+        xb, yb = isb(node.x), isb(node.y)
+        bsrc = "m.b" if xb else "n.b"
+        bjoin = " and m.b = n.b" if xb and yb else ""
+        return (f"select {bsrc} as b, m.i, n.j, sum(m.v*n.v) as v\n"
+                f"  from {n(node.x)} as m inner join {n(node.y)} as n"
+                f" on m.j = n.i{bjoin}\n  group by {bsrc}, m.i, n.j")
+    if isinstance(node, (E.Hadamard, E.Add, E.Sub)):
+        op = {"Hadamard": "*", "Add": "+", "Sub": "-"}[type(node).__name__]
+        xb, yb = isb(node.x), isb(node.y)
+        bsrc = "m.b" if xb else "n.b"
+        bjoin = " and m.b = n.b" if xb and yb else ""
+        return (f"select {bsrc} as b, m.i, m.j, m.v {op} n.v as v\n"
+                f"  from {n(node.x)} as m inner join {n(node.y)} as n"
+                f" on m.i = n.i and m.j = n.j{bjoin}")
+    if isinstance(node, E.Scale):
+        return f"select b, i, j, {node.c} * v as v from {n(node.x)}"
+    if isinstance(node, E.Transpose):
+        return f"select b, j as i, i as j, v from {n(node.x)}"
+    if isinstance(node, MapDeriv):
+        if node.fn is E.SIGMOID:
+            return f"select b, i, j, v*(1-v) as v from {n(node.fx)}"
+        if node.fn is E.SQUARE:
+            return f"select b, i, j, 2*v as v from {n(node.x)}"
+        if node.fn is E.RELU:
+            return (f"select b, i, j, case when v > 0 then 1 else 0 end as v"
+                    f" from {n(node.x)}")
+        if node.fn is E.RECIP:
+            return f"select b, i, j, -(v*v) as v from {n(node.fx)}"
+        raise NotImplementedError(node.fn.name)
+    if isinstance(node, ReduceDeriv):
+        on = "i" if node.axis == 1 else "j"
+        xb, rb = isb(node.x), isb(node.red)
+        bsrc = "m.b" if xb else "r.b"
+        bjoin = " and m.b = r.b" if xb and rb else ""
+        return (f"select {bsrc} as b, m.i, m.j, case when m.v = r.v then 1.0"
+                f" else 0.0 end as v\n  from {n(node.x)} as m inner join"
+                f" {n(node.red)} as r on m.{on} = r.{on}{bjoin}")
+    if isinstance(node, E.Map):
+        return (f"select b, i, j, {dialect.map_sql(node.fn, 'v')} as v"
+                f" from {n(node.x)}")
+    if isinstance(node, E.RowReduce):
+        if node.axis == 1:
+            return (f"select b, i, 1 as j, {node.kind}(v) as v"
+                    f" from {n(node.x)}\n  group by b, i")
+        return (f"select b, 1 as i, j, {node.kind}(v) as v"
+                f" from {n(node.x)}\n  group by b, j")
+    if isinstance(node, E.Softmax):
+        src = n(node.x)
+        return (f"select m.b, m.i, m.j, exp(m.v - d.mx) / d.den as v\n"
+                f"  from {src} as m inner join (\n"
+                f"    select e.b, e.i, e.mx, sum(exp(e2.v - e.mx)) as den\n"
+                f"      from (select b, i, max(v) as mx from {src}"
+                f" group by b, i) e\n"
+                f"      inner join {src} as e2 on e2.b = e.b and e2.i = e.i\n"
+                f"     group by e.b, e.i, e.mx\n"
+                f"  ) d on m.b = d.b and m.i = d.i")
+    if isinstance(node, E.ArgTopK):
+        return dialect.topk_mask_select_b(n(node.x), node.k)
+    if isinstance(node, E.Gather):
+        gb, xb = isb(node.idx), isb(node.x)
+        bsrc = "g.b" if gb else "m.b"
+        bjoin = " and m.b = g.b" if gb and xb else ""
+        return (f"select {bsrc} as b, g.i, m.j, m.v\n"
+                f"  from {n(node.idx)} as g inner join {n(node.x)} as m"
+                f" on m.i = cast(g.v as integer) + 1{bjoin}")
+    if isinstance(node, E.Scatter):
+        rows, cols = node.shape
+        gb, xb = isb(node.idx), isb(node.x)
+        bsrc = "g.b" if gb else "m.b"
+        bjoin = " and m.b = g.b" if gb and xb else ""
+        dom = n(node.x) if xb else n(node.idx)
+        return (f"select bb.b, a.i, b.j, coalesce(acc.v, 0.0) as v\n"
+                f"  from (select distinct b from {dom}) bb cross join\n"
+                f"       {dialect.frame_from(rows, cols)}\n"
+                f"  left join (\n"
+                f"    select {bsrc} as b, cast(g.v as integer) + 1 as i,"
+                f" m.j, sum(m.v) as v\n"
+                f"      from {n(node.idx)} as g inner join {n(node.x)} as m"
+                f" on m.i = g.i{bjoin}\n"
+                f"     group by {bsrc}, cast(g.v as integer) + 1, m.j\n"
+                f"  ) acc on acc.b = bb.b and acc.i = a.i and acc.j = b.j")
+    if isinstance(node, E.RowShift):
+        rows, cols = node.shape
+        return (f"select bb.b, a.i, b.j, coalesce(m.v, 0.0) as v\n"
+                f"  from (select distinct b from {n(node.x)}) bb cross join\n"
+                f"       {dialect.frame_from(rows, cols)}\n"
+                f"  left join {n(node.x)} as m"
+                f" on m.b = bb.b and m.i = a.i - ({node.offset})"
+                f" and m.j = b.j")
+    if isinstance(node, E.StepOuter):
+        k = node.x.shape[1]
+        xb, yb = isb(node.x), isb(node.y)
+        bsrc = "m.b" if xb else "n.b"
+        bjoin = " and m.b = n.b" if xb and yb else ""
+        return (f"select {bsrc} as b, ({k} * (m.i - 1)) + m.j as i, n.j,"
+                f" m.v * n.v as v\n"
+                f"  from {n(node.x)} as m inner join {n(node.y)} as n"
+                f" on m.i = n.i{bjoin}")
+    raise TypeError(type(node))
+
+
 def _mat_scan_bounds(node: E.MatRecurrence) -> tuple[int, str, str]:
     """(anchor step, next-step expression, continue guard) of the scan's
     t-walk, shared by every MatRecurrence rendering."""
@@ -487,6 +629,26 @@ def _fused_cte_sql(node: E.Expr, inputs: list[E.Expr],
     return f"select f0.i, f0.j, {expr} as v\n  from {frm}"
 
 
+def _fused_cte_sql_b(node: E.Expr, inputs: list[E.Expr],
+                     nm: dict[int, str], dialect, bt) -> str:
+    """Batched fused region: batched boundary inputs are reordered first so
+    ``f0`` supplies both the row frame and the ``b`` column; further batched
+    inputs join on (b, i, j), unbatched inputs broadcast on (i, j)."""
+    ordered = ([c for c in inputs if id(c) in bt]
+               + [c for c in inputs if id(c) not in bt])
+    if id(ordered[0]) not in bt:  # defensive: region root batched ⇒ an input is
+        return _fused_cte_sql(node, inputs, nm, dialect)
+    alias = {id(c): f"f{k}" for k, c in enumerate(ordered)}
+    expr = _fused_expr(node, alias, dialect)
+    frm = f"{nm[id(ordered[0])]} as f0"
+    for k, c in enumerate(ordered[1:], start=1):
+        cond = f"f{k}.i = f0.i and f{k}.j = f0.j"
+        if id(c) in bt:
+            cond = f"f{k}.b = f0.b and " + cond
+        frm += f"\n  inner join {nm[id(c)]} as f{k} on {cond}"
+    return f"select f0.b, f0.i, f0.j, {expr} as v\n  from {frm}"
+
+
 def _fused_array_cte_sql(node: E.Expr, inputs: list[E.Expr],
                          nm: dict[int, str]) -> str:
     """The array-representation fused spelling: the region renders as one
@@ -509,14 +671,24 @@ def _fused_array_cte_sql(node: E.Expr, inputs: list[E.Expr],
 
 
 def _node_ctes(node: E.Expr, nm: dict[int, str], dialect, regions,
-               representation: str) -> list[str]:
+               representation: str, bt=frozenset()) -> list[str]:
     """The CTE strings one surviving node renders to (a MatRecurrence
-    lowers to several; a fused region root carries its whole region)."""
+    lowers to several; a fused region root carries its whole region).
+    Nodes in ``bt`` render the batched spelling — ``(b, i, j, v)`` /
+    ``(b, m)`` columns."""
+    batched = id(node) in bt
     if representation == "array":
         if isinstance(node, E.Recurrence):
             return _array_scan_ctes(node, nm)
         if isinstance(node, E.MatRecurrence):
             return _array_mat_scan_ctes(node, nm)
+        if batched:
+            if id(node) in regions:
+                body = _fused_array_cte_sql_b(node, regions[id(node)][1],
+                                              nm, bt)
+            else:
+                body = _array_cte_sql_b(node, nm, bt)
+            return [f"{nm[id(node)]}(b, m) as (\n  {body}\n)"]
         if id(node) in regions:
             body = _fused_array_cte_sql(node, regions[id(node)][1], nm)
         else:
@@ -524,6 +696,13 @@ def _node_ctes(node: E.Expr, nm: dict[int, str], dialect, regions,
         return [f"{nm[id(node)]}(m) as (\n  select {body} as m\n)"]
     if isinstance(node, E.MatRecurrence):
         return _mat_scan_ctes(node, nm, dialect)
+    if batched:
+        if id(node) in regions:
+            body = _fused_cte_sql_b(node, regions[id(node)][1], nm,
+                                    dialect, bt)
+        else:
+            body = _cte_sql_b(node, nm, dialect, bt)
+        return [f"{nm[id(node)]}(b, i, j, v) as (\n  {body}\n)"]
     if id(node) in regions:
         body = _fused_cte_sql(node, regions[id(node)][1], nm, dialect)
     else:
@@ -532,11 +711,14 @@ def _node_ctes(node: E.Expr, nm: dict[int, str], dialect, regions,
 
 
 def _render_ctes(roots: list[E.Expr], dialect, fuse: bool = False,
-                 representation: str = "relational"
+                 representation: str = "relational", batch=None
                  ) -> tuple[list[str], dict[int, str], bool]:
-    """(ctes, id→name map, whether a self-referencing scan is present)."""
+    """(ctes, id→name map, whether a self-referencing scan is present).
+    ``batch`` is the set of batched leaf Var names (None/empty: the plain
+    rendering, byte-identical to pre-batch output)."""
     order = E.topo_order(*roots)
     nm = assign_names(order)
+    bt = batched_ids(roots, batch) if batch else frozenset()
     regions, skip = fuse_dag(roots) if fuse else ({}, set())
     ctes: list[str] = []
     has_scan = False
@@ -545,7 +727,7 @@ def _render_ctes(roots: list[E.Expr], dialect, fuse: bool = False,
                                                  E.MatRecurrence))
         if isinstance(node, E.Var) or id(node) in skip:
             continue
-        ctes += _node_ctes(node, nm, dialect, regions, representation)
+        ctes += _node_ctes(node, nm, dialect, regions, representation, bt)
     return ctes, nm, has_scan
 
 
@@ -559,59 +741,83 @@ def render_ctes(roots: list[E.Expr], dialect=None
 
 
 def to_sql92(roots: list[E.Expr], select=None, dialect=None,
-             fuse: bool = False) -> str:
+             fuse: bool = False, batch=None) -> str:
     """Emit a WITH query: one CTE per non-leaf node, topologically ordered.
 
     ``select`` is the query tail: a literal string, or a callable
     ``select(nm)`` receiving the id→name map (use the callable form for
     tails that reference auto-named roots — their CTE names are assigned at
     render time).  ``fuse=True`` runs the :func:`fuse_dag` peephole pass
-    first: single-consumer elementwise chains collapse into one CTE."""
+    first: single-consumer elementwise chains collapse into one CTE.
+    ``batch`` names the batched leaf Vars (see :func:`batched_ids`)."""
     dialect = _get_dialect(dialect)
     # has_scan: a Recurrence CTE references itself — WITH must say RECURSIVE
-    ctes, nm, has_scan = _render_ctes(roots, dialect, fuse=fuse)
+    ctes, nm, has_scan = _render_ctes(roots, dialect, fuse=fuse, batch=batch)
     if callable(select):
         select = select(nm)
-    tail = select or f"select * from {nm[id(roots[-1])]} order by i, j"
+    root_batched = batch and id(roots[-1]) in batched_ids(roots, batch)
+    order_cols = "b, i, j" if root_batched else "i, j"
+    tail = select or (f"select * from {nm[id(roots[-1])]} "
+                      f"order by {order_cols}")
     if not ctes:  # every root is a stored table
         return f"{tail};"
     body = ",\n".join(ctes)
     return f"{_with_keyword(dialect, recursive=has_scan)} {body}\n{tail};"
 
 
-def multi_root_select(roots: list[E.Expr]):
+def multi_root_select(roots: list[E.Expr], batch=None):
     """A union-all tail tagging each root's tuples with its position — lets
     one statement return every output of a multi-root DAG (loss + grads).
     Returns a callable for :func:`to_sql92`'s ``select`` so each root is
-    addressed by its render-time name (its CTE, or its table if a Var)."""
+    addressed by its render-time name (its CTE, or its table if a Var).
+    With ``batch`` the tail carries the request index next to the root tag
+    — ``(r, b, i, j, v)`` — and unbatched roots emit ``-1`` (broadcast to
+    every request at decode time)."""
+    bt = batched_ids(roots, batch) if batch else None
+
     def tail(nm: dict[int, str]) -> str:
+        if bt is None:
+            return "\nunion all ".join(
+                f"select {k} as r, i, j, v from {nm[id(r)]}"
+                for k, r in enumerate(roots))
         return "\nunion all ".join(
-            f"select {k} as r, i, j, v from {nm[id(r)]}"
+            (f"select {k} as r, b, i, j, v from {nm[id(r)]}"
+             if id(r) in bt else
+             f"select {k} as r, -1 as b, i, j, v from {nm[id(r)]}")
             for k, r in enumerate(roots))
 
     return tail
 
 
-def multi_root_select_array(roots: list[E.Expr]):
+def multi_root_select_array(roots: list[E.Expr], batch=None):
     """The array-representation multi-root tail: one ``(r, m)`` row per
-    root, ``m`` the JSON array codec of the whole matrix."""
+    root, ``m`` the JSON array codec of the whole matrix — ``(r, b, m)``
+    with a batch, ``b = -1`` for unbatched (broadcast) roots."""
+    bt = batched_ids(roots, batch) if batch else None
+
     def tail(nm: dict[int, str]) -> str:
+        if bt is None:
+            return "\nunion all ".join(
+                f"select {k} as r, m from {nm[id(r)]}"
+                for k, r in enumerate(roots))
         return "\nunion all ".join(
-            f"select {k} as r, m from {nm[id(r)]}"
+            (f"select {k} as r, b, m from {nm[id(r)]}"
+             if id(r) in bt else
+             f"select {k} as r, -1 as b, m from {nm[id(r)]}")
             for k, r in enumerate(roots))
 
     return tail
 
 
-def multi_root_tail(roots: list[E.Expr], dialect=None):
+def multi_root_tail(roots: list[E.Expr], dialect=None, batch=None):
     """The multi-root union tail matching the dialect's representation."""
     if _get_dialect(dialect).representation == "array":
-        return multi_root_select_array(roots)
-    return multi_root_select(roots)
+        return multi_root_select_array(roots, batch=batch)
+    return multi_root_select(roots, batch=batch)
 
 
 def to_sql(roots: list[E.Expr], select=None, dialect=None,
-           fuse: bool = False) -> str:
+           fuse: bool = False, batch=None) -> str:
     """The representation-dispatching entry point: relational dialects
     render through :func:`to_sql92` (one cell-relation CTE per node), the
     array dialect through :func:`to_sql_array_ctes` (one array-typed row
@@ -619,8 +825,10 @@ def to_sql(roots: list[E.Expr], select=None, dialect=None,
     and ``SQLEngine`` call."""
     dialect = _get_dialect(dialect)
     if dialect.representation == "array":
-        return to_sql_array_ctes(roots, select=select, fuse=fuse)
-    return to_sql92(roots, select=select, dialect=dialect, fuse=fuse)
+        return to_sql_array_ctes(roots, select=select, fuse=fuse,
+                                 batch=batch)
+    return to_sql92(roots, select=select, dialect=dialect, fuse=fuse,
+                    batch=batch)
 
 
 # ---------------------------------------------------------------------------
@@ -697,7 +905,7 @@ def _render_refs(node: E.Expr, regions, representation: str):
 
 def render_plan(roots: list[E.Expr], select=None, dialect=None,
                 fuse: bool = False, spool: bool = False,
-                spool_threshold: int = 2) -> Plan:
+                spool_threshold: int = 2, batch=None) -> Plan:
     """Render a DAG as a :class:`Plan`.  With ``spool=False`` this is
     :func:`to_sql` in a one-statement plan.  With ``spool=True`` every
     non-leaf relation referenced >= ``spool_threshold`` times across the
@@ -707,14 +915,16 @@ def render_plan(roots: list[E.Expr], select=None, dialect=None,
     reference re-executes the subplan, so a shared matmul otherwise runs
     once per consumer.  ``spool_threshold=1`` spools *every* non-leaf node
     (one step per IR node) — the per-node profiled execution mode of
-    :mod:`repro.obs.profiler`."""
+    :mod:`repro.obs.profiler`.  ``batch`` names the batched leaf Vars:
+    batched spool steps carry the ``b`` column through their temp tables."""
     dialect = _get_dialect(dialect)
     rep = dialect.representation
     if not spool:
         return Plan(sql=to_sql(roots, select=select, dialect=dialect,
-                               fuse=fuse))
+                               fuse=fuse, batch=batch))
     order = E.topo_order(*roots)
     nm = assign_names(order)
+    bt = batched_ids(roots, batch) if batch else frozenset()
     regions, skip = fuse_dag(roots) if fuse else ({}, set())
     nodes = [n for n in order
              if not isinstance(n, E.Var) and id(n) not in skip]
@@ -755,7 +965,7 @@ def render_plan(roots: list[E.Expr], select=None, dialect=None,
         for n in member:
             has_scan = has_scan or isinstance(n, (E.Recurrence,
                                                   E.MatRecurrence))
-            ctes += _node_ctes(n, nm_use, dialect, regions, rep)
+            ctes += _node_ctes(n, nm_use, dialect, regions, rep, bt)
         if not ctes:
             return f"{tail};"
         body = ",\n".join(ctes)
@@ -769,8 +979,12 @@ def render_plan(roots: list[E.Expr], select=None, dialect=None,
         for t in spooled:
             if t is not s:
                 nm_s[id(t)] = sp_name[id(t)]
-        tail_s = (f"select m from {nm[id(s)]}" if rep == "array"
-                  else f"select i, j, v from {nm[id(s)]}")
+        if id(s) in bt:
+            tail_s = (f"select b, m from {nm[id(s)]}" if rep == "array"
+                      else f"select b, i, j, v from {nm[id(s)]}")
+        else:
+            tail_s = (f"select m from {nm[id(s)]}" if rep == "array"
+                      else f"select i, j, v from {nm[id(s)]}")
         body = statement(member_nodes([s], id(s)), nm_s, tail_s)
         steps.append((sp_name[id(s)],
                       f"create temp table {sp_name[id(s)]} as\n{body}"))
@@ -782,9 +996,12 @@ def render_plan(roots: list[E.Expr], select=None, dialect=None,
     elif select:
         tail_main = select
     elif rep == "array":
-        tail_main = f"select m from {nm_main[id(roots[-1])]}"
+        cols = "b, m" if id(roots[-1]) in bt else "m"
+        tail_main = f"select {cols} from {nm_main[id(roots[-1])]}"
     else:
-        tail_main = f"select * from {nm_main[id(roots[-1])]} order by i, j"
+        order_by = "b, i, j" if id(roots[-1]) in bt else "i, j"
+        tail_main = (f"select * from {nm_main[id(roots[-1])]} "
+                     f"order by {order_by}")
     main = statement(member_nodes(roots), nm_main, tail_main)
     return Plan(sql=main, steps=tuple(steps))
 
@@ -1032,14 +1249,11 @@ def array_call_expr(node: E.Expr, leaf) -> str:
 # the array dialect: one CTE per node, each ONE array-typed row
 # ---------------------------------------------------------------------------
 
-def _array_cte_sql(node: E.Expr, nm: dict[int, str]) -> str:
-    """Render one node's matrix as a select-clause expression over the UDF
-    array extension — the array-dialect twin of :func:`_cte_sql`.  Children
-    are scalar subqueries against their CTEs (or leaf tables), so shared
-    subexpressions stay shared exactly as in the relational rendering.
-    The algebra/Map tier comes from the shared :func:`_array_call` table;
-    only the zoo primitives are spelled here."""
-    ref = lambda c: f"(select m from {nm[id(c)]})"
+def _array_node_sql(node: E.Expr, ref) -> str:
+    """The UDF-call spelling of any non-scan node over an arbitrary child
+    reference renderer ``ref`` — the algebra/Map tier from the shared
+    :func:`_array_call` table, the zoo primitives spelled here.  Both the
+    plain and the batched array CTE renderings delegate to this."""
     sql = _array_call(node, ref)
     if sql is not None:
         return sql
@@ -1060,6 +1274,64 @@ def _array_cte_sql(node: E.Expr, nm: dict[int, str]) -> str:
     if isinstance(node, E.StepOuter):
         return f"mstepouter({ref(node.x)}, {ref(node.y)})"
     raise TypeError(type(node))
+
+
+def _array_cte_sql(node: E.Expr, nm: dict[int, str]) -> str:
+    """Render one node's matrix as a select-clause expression over the UDF
+    array extension — the array-dialect twin of :func:`_cte_sql`.  Children
+    are scalar subqueries against their CTEs (or leaf tables), so shared
+    subexpressions stay shared exactly as in the relational rendering."""
+    return _array_node_sql(node, lambda c: f"(select m from {nm[id(c)]})")
+
+
+def _batched_array_legs(children, nm: dict[int, str], bt):
+    """(alias map, FROM clause) over the *batched* children of an array
+    node: each becomes a join leg equated on ``b``; order deduped by id."""
+    legs, seen = [], set()
+    for c in children:
+        if id(c) in bt and id(c) not in seen:
+            seen.add(id(c))
+            legs.append(c)
+    alias = {id(c): f"f{k}" for k, c in enumerate(legs)}
+    frm = f"{nm[id(legs[0])]} as f0"
+    for k, c in enumerate(legs[1:], start=1):
+        frm += f" inner join {nm[id(c)]} as f{k} on f{k}.b = f0.b"
+    return alias, frm
+
+
+def _array_cte_sql_b(node: E.Expr, nm: dict[int, str], bt) -> str:
+    """Batched array rendering: one ``(b, m)`` row per request.  Batched
+    children ride as join legs on ``b`` (their ``m`` referenced per row);
+    unbatched children stay the scalar subqueries of the plain rendering —
+    shared weights are read once per request row, same values each time."""
+    alias, frm = _batched_array_legs(_used_children(node), nm, bt)
+    ref = lambda c: (f"{alias[id(c)]}.m" if id(c) in alias
+                     else f"(select m from {nm[id(c)]})")
+    return f"select f0.b as b, {_array_node_sql(node, ref)} as m\n  from {frm}"
+
+
+def _fused_array_cte_sql_b(node: E.Expr, inputs: list[E.Expr],
+                           nm: dict[int, str], bt) -> str:
+    """Batched fused array region: the region's call chain inlines as in
+    the unbatched spelling, but batched boundary inputs become join legs
+    on ``b`` instead of scalar subqueries."""
+    input_ids = {id(c) for c in inputs}
+    alias, frm = _batched_array_legs(inputs, nm, bt)
+
+    def ref(c):
+        if id(c) in alias:
+            return f"{alias[id(c)]}.m"
+        if id(c) in input_ids:
+            return f"(select m from {nm[id(c)]})"
+        sql = _array_call(c, ref)
+        if sql is None:
+            raise TypeError(type(c))
+        return sql
+
+    sql = _array_call(node, ref)
+    if sql is None:
+        raise TypeError(type(node))
+    return f"select f0.b as b, {sql} as m\n  from {frm}"
 
 
 def _array_rows_reassembly(me: str) -> str:
@@ -1124,18 +1396,21 @@ def _array_mat_scan_ctes(node: E.MatRecurrence, nm: dict[int, str]
 
 
 def to_sql_array_ctes(roots: list[E.Expr], select=None,
-                      fuse: bool = False) -> str:
+                      fuse: bool = False, batch=None) -> str:
     """Emit the array-dialect WITH query: one single-row CTE per non-leaf
     node, topologically ordered — Listing 10's named-expression reuse with
     the executable UDF spelling.  ``select`` follows the :func:`to_sql92`
     contract (string, or callable over the id→name map); the default tail
     returns the last root's array value.  ``fuse=True`` collapses
-    single-consumer elementwise chains into nested UDF calls."""
+    single-consumer elementwise chains into nested UDF calls.  ``batch``
+    names the batched leaf Vars (their tables carry ``(b, m)`` rows)."""
     ctes, nm, has_scan = _render_ctes(roots, None, fuse=fuse,
-                                      representation="array")
+                                      representation="array", batch=batch)
     if callable(select):
         select = select(nm)
-    tail = select or f"select m from {nm[id(roots[-1])]}"
+    root_batched = batch and id(roots[-1]) in batched_ids(roots, batch)
+    root_cols = "b, m" if root_batched else "m"
+    tail = select or f"select {root_cols} from {nm[id(roots[-1])]}"
     if not ctes:  # every root is a stored table
         return f"{tail};"
     body = ",\n".join(ctes)

@@ -30,10 +30,12 @@ Ingestion strategy per backend (the MNIST-scale bottleneck — see
 """
 from __future__ import annotations
 
+import itertools
 import logging
 import os
 import re
 import sqlite3
+import threading
 import time
 from typing import Iterable, Sequence
 
@@ -76,6 +78,30 @@ def _check_ident(name: str) -> str:
     return name
 
 
+#: process-wide table-generation registry: (db_key, table) → generation,
+#: bumped by every structured mutation through ANY adapter of the same
+#: logical database.  Pooled connections on one file see each other's
+#: writes, so per-adapter caches (``matrix_cache`` / ``matrix_digests`` /
+#: ``matrix_meta``) are trustworthy only while the generation they were
+#: recorded at (``Adapter.matrix_gen``) still matches — the fix for the
+#: two-connection stale-delta bug (``update_matrix_delta`` patching cells
+#: on top of a sibling's rewrite).
+_GEN_LOCK = threading.Lock()
+_TABLE_GEN: dict[tuple[str, str], int] = {}
+#: unique per-adapter token for non-shared registry keys (``:memory:``
+#: databases, temp-table namespaces).  A plain ``id(self)`` is NOT unique
+#: over time — CPython reuses addresses, so a fresh ``:memory:`` adapter
+#: could inherit a dead sibling's generations/digests and "adopt" tables
+#: it never wrote
+_CONN_SEQ = itertools.count()
+#: (db_key, table) → content digest as last written by ANY adapter.  A
+#: pooled worker about to ingest a leaf whose digest already matches can
+#: ADOPT the resident table instead of rewriting it — without this, two
+#: workers alternating on one shared weight relation would invalidate each
+#: other forever (write ping-pong).  Popped on every generation bump.
+_TABLE_DIGEST: dict[tuple[str, str], bytes] = {}
+
+
 class Adapter:
     """Base adapter: a prepared connection + its dialect."""
 
@@ -108,15 +134,79 @@ class Adapter:
         #: (``relation_io.DELTA_MAX_CELLS`` gate) — the diff base that turns
         #: a leaf refresh into a prepared UPDATE of only the changed cells
         self.matrix_cache: dict[str, np.ndarray] = {}
+        #: table → generation (``table_gen``) at which the caches above
+        #: were recorded; ``cache_fresh`` compares it against the shared
+        #: registry before any of them is trusted
+        self.matrix_gen: dict[str, int] = {}
         #: tracer override for this connection's spans (None → the
         #: module-level active tracer, a no-op unless installed)
         self.tracer = None
-        #: always-on cheap counters, merged into ``SQLEngine.stats``
+        #: serializes ALL raw-connection access AND counter updates —
+        #: sqlite connections opened ``check_same_thread=False`` and duckdb
+        #: cursors are handed across pool-worker threads; re-entrant so
+        #: span-wrapped fast paths may nest ``execute`` calls
+        self.lock = threading.RLock()
+        #: identity of the logical database for the shared generation
+        #: registry; file-backed adapters override with a path key so
+        #: sibling connections on one file share generations.  The token
+        #: is a process-lifetime-unique sequence number, never id()
+        self._conn_token = next(_CONN_SEQ)
+        self._db_key = f"conn:{self._conn_token}"
+        #: tables created ``temp=True`` — per-connection namespace, keyed
+        #: per-adapter in the registry so temp churn never invalidates
+        #: sibling connections
+        self._temp_tables: set[str] = set()
+        #: always-on cheap counters, merged into ``SQLEngine.stats``;
+        #: mutate through ``add_counters`` (or under ``self.lock``) — plain
+        #: ``+=`` from pool workers drops increments
         self.counters: dict[str, int] = {
             "queries": 0, "statements": 0, "rows_returned": 0,
             "ingest_bytes": 0, "ingest_cells": 0, "slow_queries": 0,
         }
         self.dialect.prepare(conn)
+
+    # -- cross-connection cache coherence -----------------------------------
+    def _gen_key(self, name: str) -> tuple[str, str]:
+        """Registry key for a table: temp tables are invisible to sibling
+        connections, so they key per-adapter; everything else keys per
+        logical database."""
+        if name in self._temp_tables:
+            return (f"tmp:{self._conn_token}", name)
+        return (self._db_key, name)
+
+    def table_gen(self, name: str) -> int:
+        with _GEN_LOCK:
+            return _TABLE_GEN.get(self._gen_key(name), 0)
+
+    def bump_gen(self, name: str) -> None:
+        """Advance the table's shared generation (and drop its shared
+        digest): every sibling adapter's caches for it become stale."""
+        with _GEN_LOCK:
+            k = self._gen_key(name)
+            _TABLE_GEN[k] = _TABLE_GEN.get(k, 0) + 1
+            _TABLE_DIGEST.pop(k, None)
+
+    def cache_fresh(self, name: str) -> bool:
+        """Were this adapter's cached digest/meta/diff-copy for ``name``
+        recorded at the table's CURRENT generation?  False the moment any
+        sibling adapter on the same database mutates the relation."""
+        gen = self.matrix_gen.get(name)
+        return gen is not None and gen == self.table_gen(name)
+
+    def shared_digest(self, name: str) -> bytes | None:
+        with _GEN_LOCK:
+            return _TABLE_DIGEST.get(self._gen_key(name))
+
+    def record_digest(self, name: str, digest: bytes) -> None:
+        with _GEN_LOCK:
+            _TABLE_DIGEST[self._gen_key(name)] = digest
+
+    def add_counters(self, **deltas: int) -> None:
+        """Locked read-modify-write of the always-on counters — exact
+        totals even when pool workers ingest concurrently."""
+        with self.lock:
+            for k, v in deltas.items():
+                self.counters[k] = self.counters.get(k, 0) + v
 
     # -- statement execution ------------------------------------------------
     #
@@ -137,9 +227,10 @@ class Adapter:
                         tracer.current_path() or "<untraced>", head)
 
     def execute(self, sql: str, params: Sequence = ()) -> list[tuple]:
-        """Run one statement, return all result rows (possibly empty)."""
+        """Run one statement, return all result rows (possibly empty).
+        Serialized on ``self.lock`` — one connection, many threads."""
         tr = tracer_of(self)
-        with tr.span("db.execute") as sp:
+        with tr.span("db.execute") as sp, self.lock:
             t0 = time.perf_counter()
             cur = self.conn.execute(sql, tuple(params))
             try:
@@ -157,7 +248,7 @@ class Adapter:
 
     def executemany(self, sql: str, rows: Iterable[Sequence]) -> None:
         tr = tracer_of(self)
-        with tr.span("db.executemany") as sp:
+        with tr.span("db.executemany") as sp, self.lock:
             t0 = time.perf_counter()
             self.conn.executemany(sql, rows)
             dt = time.perf_counter() - t0
@@ -179,24 +270,48 @@ class Adapter:
         return None
 
     # -- schema / data ------------------------------------------------------
+    def forget(self, name: str) -> None:
+        """Drop THIS adapter's caches for a table without advancing the
+        shared generation — used when this adapter discovers its caches
+        are stale: the resident content is a sibling's valid write, and
+        bumping here would ping-pong invalidations between workers."""
+        self.matrix_digests.pop(name, None)
+        self.matrix_meta.pop(name, None)
+        self.matrix_cache.pop(name, None)
+        self.matrix_gen.pop(name, None)
+
     def _invalidate(self, name: str) -> None:
         """Forget everything cached about a matrix table — content digest,
         shape metadata and the client-side diff copy — so any structured
         mutation of the relation disables the unchanged-leaf skip AND the
-        bound-parameter delta path until the next full registration."""
-        self.matrix_digests.pop(name, None)
-        self.matrix_meta.pop(name, None)
-        self.matrix_cache.pop(name, None)
+        bound-parameter delta path until the next full registration.  Also
+        advances the table's shared generation: sibling pooled adapters'
+        caches go stale with ours."""
+        self.forget(name)
+        self.bump_gen(name)
 
     def create_table(self, name: str, columns: Sequence[tuple[str, str]],
-                     replace: bool = True) -> None:
-        """``columns`` is [(col_name, sql_type), ...]."""
+                     replace: bool = True, temp: bool = False) -> None:
+        """``columns`` is [(col_name, sql_type), ...].  ``temp=True``
+        creates a per-connection temp table (batched request leaves):
+        invisible to sibling connections, so its generation is keyed
+        per-adapter and never invalidates their caches."""
         _check_ident(name)
+        if replace and not temp and name in self._temp_tables:
+            # a temp table shadows the main-schema name on this
+            # connection: DROP resolves to the shadow, so one drop below
+            # would leave the resident main table colliding with CREATE
+            self.execute(f"drop table if exists {name}")
+        if temp:
+            self._temp_tables.add(name)
+        else:
+            self._temp_tables.discard(name)
         self._invalidate(name)
         cols = ", ".join(f"{_check_ident(c)} {t}" for c, t in columns)
+        kw = "temp table" if temp else "table"
         if replace:
             self.execute(f"drop table if exists {name}")
-        self.execute(f"create table {name} ({cols})")
+        self.execute(f"create {kw} {name} ({cols})")
 
     def bulk_insert(self, name: str, rows: Iterable[Sequence]) -> None:
         self._invalidate(name)
@@ -247,6 +362,7 @@ class Adapter:
         rowid fast path."""
         _check_ident(name)
         self.matrix_digests.pop(name, None)
+        self.bump_gen(name)
         cols = int(shape[1])
         i = (flat_index // cols + 1).tolist()
         j = (flat_index % cols + 1).tolist()
@@ -257,14 +373,16 @@ class Adapter:
 
     # -- lifecycle ----------------------------------------------------------
     def commit(self) -> None:
-        self.conn.commit()
+        with self.lock:
+            self.conn.commit()
 
     def close(self) -> None:
-        try:  # flush pending inserts — sqlite3 rolls back open transactions
-            self.conn.commit()
-        except Exception:  # pragma: no cover - autocommit engines (duckdb)
-            pass
-        self.conn.close()
+        with self.lock:
+            try:  # flush pending inserts — sqlite3 rolls back open txns
+                self.conn.commit()
+            except Exception:  # pragma: no cover - autocommit (duckdb)
+                pass
+            self.conn.close()
 
     def __enter__(self):
         return self
@@ -286,8 +404,22 @@ class SQLiteAdapter(Adapter):
     #: (measured on this container's 3.34 — ``bench_mnist_db.py``)
     JSON_LINEAR_VERSION = (3, 38)
 
+    #: milliseconds a statement waits on a sibling connection's write lock
+    #: before ``database is locked`` — generous: pool writers serialize
+    BUSY_TIMEOUT_MS = 30_000
+
     def __init__(self, path: str = ":memory:"):
-        super().__init__(sqlite3.connect(path))
+        # check_same_thread=False: the adapter serializes every raw-
+        # connection access on ``self.lock``, so handing the connection
+        # across pool-worker threads is safe — sqlite's own affinity check
+        # would raise ProgrammingError on the first cross-thread call
+        super().__init__(sqlite3.connect(
+            path, timeout=self.BUSY_TIMEOUT_MS / 1e3,
+            check_same_thread=False))
+        self.path = path
+        if path != ":memory:":
+            # sibling connections on one file share table generations
+            self._db_key = "sqlite:" + os.path.abspath(path)
         #: runtime engine version — instance-level so tests can pin it
         self.sqlite_version = sqlite3.sqlite_version_info
         try:  # table-valued JSON ingestion needs the (default) JSON1 ext.
@@ -296,6 +428,16 @@ class SQLiteAdapter(Adapter):
             self.supports_json_ingest = True
         except sqlite3.Error:  # pragma: no cover - JSON1-less builds
             self.supports_json_ingest = False
+        try:
+            # obs: exempt — connection-mode pragmas at open, not queries
+            self.conn.execute(f"pragma busy_timeout = {self.BUSY_TIMEOUT_MS}")
+            if path != ":memory:":
+                # WAL: many concurrent readers + one writer across the
+                # pool's connections (a rollback-journal DB serializes
+                # readers behind any writer)
+                self.conn.execute("pragma journal_mode = wal")
+        except sqlite3.Error:  # pragma: no cover - locked-down builds
+            pass
 
     @property
     def prefers_json_ingest(self) -> bool:
@@ -317,8 +459,11 @@ class SQLiteAdapter(Adapter):
         try:
             # obs: exempt — size probe read by the tracer itself; spanning
             # it would pollute every evaluation trace with pragma queries
-            page_count, = self.conn.execute("pragma page_count").fetchone()
-            page_size, = self.conn.execute("pragma page_size").fetchone()
+            with self.lock:
+                page_count, = (self.conn.execute("pragma page_count")
+                               .fetchone())
+                page_size, = (self.conn.execute("pragma page_size")
+                              .fetchone())
             return int(page_count) * int(page_size)
         except Exception:  # pragma: no cover - pragma-less builds
             return None
@@ -360,7 +505,8 @@ class SQLiteAdapter(Adapter):
                f"select (key + ?) / {cols} + 1, key % {cols} + 1, value "
                f"from json_each(?)")
         tr = tracer_of(self)
-        with tr.span("db.ingest_json", table=name, cells=int(a.size)):
+        with tr.span("db.ingest_json", table=name, cells=int(a.size)), \
+                self.lock:
             cur = self.conn.cursor()
             for s in range(0, flat.size, chunk):
                 cur.execute(sql, (s, json.dumps(flat[s:s + chunk].tolist())))
@@ -387,7 +533,7 @@ class SQLiteAdapter(Adapter):
         batch = max(1, min(self.ROWS_PER_STMT, 999 // k))
         full, rem = divmod(n, batch)
         tr = tracer_of(self)
-        with tr.span("db.ingest_values", table=name, rows=n):
+        with tr.span("db.ingest_values", table=name, rows=n), self.lock:
             cur = self.conn.cursor()
             if full:
                 stride = k * batch
@@ -412,6 +558,7 @@ class SQLiteAdapter(Adapter):
         predicate evaluation."""
         _check_ident(name)
         self.matrix_digests.pop(name, None)
+        self.bump_gen(name)
         self.executemany(f"update {name} set v = ? where rowid = ?",
                          zip(values.tolist(), (flat_index + 1).tolist()))
 
@@ -425,6 +572,23 @@ class DuckDBAdapter(Adapter):
                               "use backend='sqlite' or pip install repro[db]")
         self.dialect = DuckDBDialect()
         super().__init__(duckdb.connect(path))
+        if path != ":memory:":  # pragma: no cover - needs duckdb
+            self._db_key = "duckdb:" + os.path.abspath(path)
+
+    def cursor_adapter(self) -> "DuckDBAdapter":  # pragma: no cover - duckdb
+        """A pool worker over this connection: ``conn.cursor()`` is a full
+        DuckDBPyConnection sharing the root's catalog, with its own temp
+        namespace and transaction state — duckdb's one-writer model with
+        per-worker cursors.  The worker shares ``_db_key`` (same logical
+        database) but carries its own lock and caches.
+        """
+        # obs: exempt — pool-worker construction, not a query; every
+        # statement the worker runs goes through the traced base methods
+        other = object.__new__(DuckDBAdapter)
+        other.dialect = DuckDBDialect()
+        Adapter.__init__(other, self.conn.cursor())
+        other._db_key = self._db_key
+        return other
 
     def executemany(self, sql, rows):  # pragma: no cover - needs duckdb
         # tuple-normalise for duckdb's binder, then ride the traced base
@@ -480,3 +644,54 @@ def connect(backend: str = "sqlite", path: str = ":memory:") -> Adapter:
         return DuckDBAdapter(path)
     raise ValueError(f"unknown backend {backend!r}; "
                      "expected 'sqlite', 'duckdb' or 'auto'")
+
+
+class ConnectionPool:
+    """A fixed set of worker adapters over ONE logical database — the
+    connection tier under :class:`repro.serving.db_serve.SQLBatchServer`.
+
+    * **sqlite file** — one WAL-mode connection per worker: WAL gives many
+      concurrent readers plus one writer, ``busy_timeout`` absorbs writer
+      collisions, and the shared generation registry keeps the per-
+      connection matrix caches coherent (same ``_db_key``).
+    * **sqlite** ``:memory:`` — N *independent* databases (stdlib sqlite3
+      shares an in-memory DB only through the deprecated ``cache=shared``
+      URI); shared leaves must be ingested into every worker — the batch
+      server's ``start()`` does.
+    * **duckdb** — ONE root connection, ``.cursor()`` per extra worker:
+      each cursor is a full connection over the root's catalog with its
+      own temp-table namespace.
+    """
+
+    def __init__(self, backend: str = "sqlite", path: str = ":memory:",
+                 size: int = 4):
+        if size < 1:
+            raise ValueError(f"pool size must be >= 1, got {size}")
+        self.backend = backend
+        self.path = path
+        root = connect(backend, path)
+        workers = [root]
+        for _ in range(size - 1):
+            if isinstance(root, DuckDBAdapter):  # pragma: no cover - duckdb
+                workers.append(root.cursor_adapter())
+            else:
+                workers.append(connect(backend, path))
+        self.adapters: list[Adapter] = workers
+
+    def __len__(self) -> int:
+        return len(self.adapters)
+
+    def __iter__(self):
+        return iter(self.adapters)
+
+    def __getitem__(self, i: int) -> Adapter:
+        return self.adapters[i]
+
+    def close(self) -> None:
+        # workers first, root (duckdb cursor parent) last
+        for a in self.adapters[:0:-1]:
+            try:
+                a.close()
+            except Exception:  # pragma: no cover - already-closed cursors
+                pass
+        self.adapters[0].close()

@@ -490,6 +490,15 @@ class Sql92Dialect:
                 f" where n.i = m.i and (n.v > m.v or (n.v = m.v and n.j < m.j))"
                 f") < {k} then 1.0 else 0.0 end as v\n  from {src} as m")
 
+    def topk_mask_select_b(self, src: str, k: int) -> str:
+        """Batched ArgTopK indicator: the rank is per (request, row) — the
+        correlated count additionally pins ``n.b = m.b`` so requests never
+        see each other's values."""
+        return (f"select m.b, m.i, m.j, case when (select count(*) from"
+                f" {src} n where n.b = m.b and n.i = m.i and (n.v > m.v or"
+                f" (n.v = m.v and n.j < m.j))) < {k} then 1.0 else 0.0 end"
+                f" as v\n  from {src} as m")
+
     # -- connection preparation --------------------------------------------
     def prepare(self, conn) -> None:
         """Install anything the rendered SQL assumes (UDFs etc.)."""
@@ -510,6 +519,15 @@ def _windowed_topk_mask(src: str, k: int) -> str:
             f" from {src}) q")
 
 
+def _windowed_topk_mask_b(src: str, k: int) -> str:
+    """Batched twin of :func:`_windowed_topk_mask`: the window partitions
+    by (b, i) so each request ranks its own rows."""
+    return (f"select q.b, q.i, q.j, case when q.rnk <= {k} then 1.0 else"
+            f" 0.0 end as v\n  from (select b, i, j, v, row_number() over"
+            f" (partition by b, i order by v desc, j asc) as rnk"
+            f" from {src}) q")
+
+
 class SqliteDialect(Sql92Dialect):
     name = "sqlite"
     series_is_recursive = True
@@ -525,6 +543,9 @@ class SqliteDialect(Sql92Dialect):
     def topk_mask_select(self, src: str, k: int) -> str:
         return _windowed_topk_mask(src, k)
 
+    def topk_mask_select_b(self, src: str, k: int) -> str:
+        return _windowed_topk_mask_b(src, k)
+
     def prepare(self, conn) -> None:
         _register_sqlite_udfs(conn)
 
@@ -535,6 +556,9 @@ class DuckDBDialect(Sql92Dialect):
 
     def topk_mask_select(self, src: str, k: int) -> str:
         return _windowed_topk_mask(src, k)
+
+    def topk_mask_select_b(self, src: str, k: int) -> str:
+        return _windowed_topk_mask_b(src, k)
 
     def prepare(self, conn) -> None:  # pragma: no cover - needs the extra
         # generate_series / exp / greatest are native; the array UDFs back

@@ -37,6 +37,7 @@ import hashlib
 import inspect
 import os
 import sqlite3
+import threading
 import time
 
 from ..core import expr as E
@@ -118,6 +119,12 @@ class PlanCache:
                 cap = DEFAULT_CAP
         self.cap = max(1, int(cap))
         self.path = path
+        #: serializes BOTH layers: the OrderedDict's move_to_end/popitem
+        #: and the persistent store's touch-flush → insert → prune
+        #: sequence are read-modify-write — racing pool workers could
+        #: evict a just-loaded hot plan or double-insert.  Re-entrant so
+        #: ``rendered`` may call ``get``/``put`` while holding it.
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         #: entries dropped by the in-process LRU / the persistent prune —
@@ -134,7 +141,9 @@ class PlanCache:
         if path:
             try:
                 os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-                self._conn = sqlite3.connect(path)
+                # the store is accessed from whichever pool worker hits
+                # it; all access is serialized on self._lock
+                self._conn = sqlite3.connect(path, check_same_thread=False)
                 self._conn.execute(
                     "create table if not exists plans ("
                     " key text primary key, dialect text, sql text,"
@@ -177,29 +186,33 @@ class PlanCache:
         self._touched.clear()
 
     def get(self, key: str) -> str | None:
-        sql = self._mem.get(key)
-        if sql is None and self._conn is not None:
-            try:
-                row = self._conn.execute(
-                    "select sql from plans where key = ?", (key,)).fetchone()
-            except Exception:  # pragma: no cover
-                row = None
-            if row:
-                sql = row[0]
-                self._mem_insert(key, sql)
-        if sql is None:
-            self.misses += 1
-        else:
-            self.hits += 1
-            if key in self._mem:
-                self._mem.move_to_end(key)
-            if self._conn is not None:  # pending disk flush; else unbounded
-                self._touched.add(key)
-        return sql
+        with self._lock:
+            sql = self._mem.get(key)
+            if sql is None and self._conn is not None:
+                try:
+                    row = self._conn.execute(
+                        "select sql from plans where key = ?",
+                        (key,)).fetchone()
+                except Exception:  # pragma: no cover
+                    row = None
+                if row:
+                    sql = row[0]
+                    self._mem_insert(key, sql)
+            if sql is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+                if key in self._mem:
+                    self._mem.move_to_end(key)
+                if self._conn is not None:  # pending flush; else unbounded
+                    self._touched.add(key)
+            return sql
 
     def put(self, key: str, sql: str, dialect: str = "") -> None:
-        self._mem_insert(key, sql)
-        if self._conn is not None:
+        with self._lock:
+            self._mem_insert(key, sql)
+            if self._conn is None:
+                return
             try:
                 self._flush_touched()   # recency must be current for prune
                 # stamp AFTER the flush: the new plan must not look colder
@@ -228,8 +241,10 @@ class PlanCache:
         """Attach the engine's EXPLAIN output to a cached plan (captured
         once per plan by the SQLEngine; '' marks capture as unsupported so
         it is not retried).  Persisted next to the rendered SQL."""
-        self._explains[key] = text
-        if self._conn is not None:
+        with self._lock:
+            self._explains[key] = text
+            if self._conn is None:
+                return
             try:
                 self._conn.execute(
                     "update plans set explain_text = ? where key = ?",
@@ -240,24 +255,27 @@ class PlanCache:
 
     def get_explain(self, key: str) -> str | None:
         """EXPLAIN text for a cached plan (None: never captured)."""
-        text = self._explains.get(key)
-        if text is None and self._conn is not None:
-            try:
-                row = self._conn.execute(
-                    "select explain_text from plans where key = ?",
-                    (key,)).fetchone()
-            except Exception:  # pragma: no cover
-                row = None
-            if row and row[0] is not None:
-                text = row[0]
-                self._explains[key] = text
-        return text
+        with self._lock:
+            text = self._explains.get(key)
+            if text is None and self._conn is not None:
+                try:
+                    row = self._conn.execute(
+                        "select explain_text from plans where key = ?",
+                        (key,)).fetchone()
+                except Exception:  # pragma: no cover
+                    row = None
+                if row and row[0] is not None:
+                    text = row[0]
+                    self._explains[key] = text
+            return text
 
     def clear(self) -> None:
-        self._mem.clear()
-        self._touched.clear()
-        self._explains.clear()
-        if self._conn is not None:
+        with self._lock:
+            self._mem.clear()
+            self._touched.clear()
+            self._explains.clear()
+            if self._conn is None:
+                return
             try:
                 self._conn.execute("delete from plans")
                 self._conn.commit()
@@ -265,13 +283,14 @@ class PlanCache:
                 pass
 
     def __len__(self) -> int:
-        if self._conn is not None:
-            try:
-                return self._conn.execute(
-                    "select count(*) from plans").fetchone()[0]
-            except Exception:  # pragma: no cover
-                pass
-        return len(self._mem)
+        with self._lock:
+            if self._conn is not None:
+                try:
+                    return self._conn.execute(
+                        "select count(*) from plans").fetchone()[0]
+                except Exception:  # pragma: no cover
+                    pass
+            return len(self._mem)
 
     @property
     def stats(self) -> dict:
@@ -282,7 +301,9 @@ class PlanCache:
                 "entries": len(self), "cap": self.cap, "path": self.path}
 
     def close(self) -> None:
-        if self._conn is not None:
+        with self._lock:
+            if self._conn is None:
+                return
             try:
                 self._flush_touched()
                 self._conn.commit()
@@ -296,12 +317,15 @@ class PlanCache:
 
     # -- rendering through the cache ----------------------------------------
     def rendered(self, key: str, dialect_name: str, render) -> str:
-        """``render()`` is called only on a miss; its output is stored."""
-        sql = self.get(key)
-        if sql is None:
-            sql = render()
-            self.put(key, sql, dialect_name)
-        return sql
+        """``render()`` is called only on a miss; its output is stored.
+        Held under the lock end-to-end so concurrent misses on one key
+        render once — the second worker hits the first one's insert."""
+        with self._lock:
+            sql = self.get(key)
+            if sql is None:
+                sql = render()
+                self.put(key, sql, dialect_name)
+            return sql
 
     def dag_sql(self, roots: list[E.Expr], dialect, tail: str = "last") -> str:
         """Rendered WITH query for ``roots``; ``tail`` ∈ {'last',
@@ -319,24 +343,32 @@ class PlanCache:
             lambda: sqlgen.to_sql(roots, select=select, dialect=dialect))
 
     def dag_plan(self, roots: list[E.Expr], dialect, tail: str = "last",
-                 fuse: bool = False, spool: bool = False) -> sqlgen.Plan:
+                 fuse: bool = False, spool: bool = False,
+                 batch=()) -> sqlgen.Plan:
         """Rendered evaluation :class:`repro.core.sqlgen.Plan` (spool
         steps + main statement) for ``roots``.  ``fuse`` and ``spool`` are
         folded into the key alongside dialect and tail, so a fused plan is
         never served to an unfused renderer (and vice versa) — the stored
         value is the plan's text serialisation, shared across processes
-        like any other entry."""
+        like any other entry.  ``batch`` names the batched leaf Vars
+        (multi-tenant serving): the WHICH-leaves-carry-``b`` set keys the
+        entry, but the batch *size* does not appear in the rendered text —
+        one cached plan serves any B."""
         if tail not in ("last", "multi_root"):
             raise ValueError(f"unknown tail kind {tail!r}")
-        key = plan_key(roots, extra=(dialect.name, f"tail:{tail}",
-                                     f"fuse:{int(fuse)}",
-                                     f"spool:{int(spool)}"))
-        select = (sqlgen.multi_root_tail(roots, dialect)
+        batch = tuple(sorted(batch)) if batch else ()
+        extra = [dialect.name, f"tail:{tail}", f"fuse:{int(fuse)}",
+                 f"spool:{int(spool)}"]
+        if batch:
+            extra.append("batch:" + ",".join(batch))
+        key = plan_key(roots, extra=tuple(extra))
+        select = (sqlgen.multi_root_tail(roots, dialect, batch=batch or None)
                   if tail == "multi_root" else None)
         text = self.rendered(
             key, dialect.name,
             lambda: sqlgen.render_plan(roots, select=select, dialect=dialect,
-                                       fuse=fuse, spool=spool).to_text())
+                                       fuse=fuse, spool=spool,
+                                       batch=batch or None).to_text())
         return sqlgen.Plan.from_text(text)
 
 

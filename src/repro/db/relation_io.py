@@ -24,8 +24,8 @@ from .dialect import json_to_matrix, matrix_to_json
 
 def _count_ingest(adapter: Adapter, a: np.ndarray) -> None:
     """Ingestion volume counters (``SQLEngine.stats`` → ``adapter``)."""
-    adapter.counters["ingest_bytes"] += int(a.nbytes)
-    adapter.counters["ingest_cells"] += int(a.size)
+    adapter.add_counters(ingest_bytes=int(a.nbytes),
+                        ingest_cells=int(a.size))
 
 
 #: largest leaf (in cells) whose client-side copy is retained as the diff
@@ -46,6 +46,9 @@ def _register_matrix(adapter: Adapter, name: str, a: np.ndarray,
         adapter.matrix_cache[name] = a.copy()
     else:
         adapter.matrix_cache.pop(name, None)
+    # pin the caches to the table's current generation: a sibling pooled
+    # connection's write bumps it, flipping adapter.cache_fresh(name) off
+    adapter.matrix_gen[name] = adapter.table_gen(name)
 
 
 #: column layout of every matrix table, matching the paper's Fig. 1
@@ -54,6 +57,12 @@ MATRIX_COLUMNS = (("i", "integer"), ("j", "integer"), ("v", "double precision"))
 #: column layout of an array-representation matrix table: the whole matrix
 #: is ONE row, column ``m`` holding the JSON array codec (paper §5)
 ARRAY_COLUMNS = (("m", "text"),)
+
+#: batched twins — a leading 0-based request index ``b``; one table holds
+#: B independent per-request matrices and ONE rendered plan evaluates all
+#: of them (the multi-tenant serving codec)
+MATRIX_BATCH_COLUMNS = (("b", "integer"),) + MATRIX_COLUMNS
+ARRAY_BATCH_COLUMNS = (("b", "integer"),) + ARRAY_COLUMNS
 
 
 # ---------------------------------------------------------------------------
@@ -72,6 +81,21 @@ def matrix_to_columns(x) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     i = np.repeat(np.arange(1, r + 1, dtype=np.int64), c)
     j = np.tile(np.arange(1, c + 1, dtype=np.int64), r)
     return i, j, a.ravel()
+
+
+def batch_to_columns(x) -> tuple[np.ndarray, np.ndarray,
+                                 np.ndarray, np.ndarray]:
+    """Batched dense stack ``(B, r, c)`` → column vectors ``(b, i, j, v)``:
+    ``b`` 0-based request index, ``(i, j)`` 1-based within each request —
+    the batched-leaf ingestion form of the multi-tenant serving tier."""
+    a = np.asarray(x, dtype=np.float64)
+    if a.ndim != 3:
+        raise ValueError(f"expected a (B, rows, cols) stack, got {a.shape}")
+    nb, r, c = a.shape
+    b = np.repeat(np.arange(nb, dtype=np.int64), r * c)
+    i = np.tile(np.repeat(np.arange(1, r + 1, dtype=np.int64), c), nb)
+    j = np.tile(np.arange(1, c + 1, dtype=np.int64), nb * r)
+    return b, i, j, a.ravel()
 
 
 def columns_to_rows(i, j, v) -> list[tuple[int, int, float]]:
@@ -169,6 +193,35 @@ def write_matrix(adapter: Adapter, name: str, x) -> None:
         _register_matrix(adapter, name, a, "relational", cache=not used_json)
 
 
+def write_matrix_batch(adapter: Adapter, name: str, x,
+                       temp: bool = True) -> None:
+    """CREATE + ingest a batched relational leaf: ``x`` is a ``(B, r, c)``
+    stack, the table ``{[b, i, j, v]}``.  Temp by default — batched
+    request leaves are per-connection scratch, invisible to (and never
+    invalidating) sibling pooled connections."""
+    a = np.asarray(x, dtype=np.float64)
+    with tracer_of(adapter).span("io.write_matrix_batch", table=name,
+                                 cells=int(a.size),
+                                 batch=int(a.shape[0]) if a.ndim else 0):
+        adapter.create_table(name, MATRIX_BATCH_COLUMNS, temp=temp)
+        adapter.insert_columns(name, batch_to_columns(a))
+        _count_ingest(adapter, a)
+
+
+def write_matrix_array_batch(adapter: Adapter, name: str, x,
+                             temp: bool = True) -> None:
+    """Batched array-representation leaf: one ``(b, m)`` row per request."""
+    a = np.asarray(x, dtype=np.float64)
+    if a.ndim != 3:
+        raise ValueError(f"expected a (B, rows, cols) stack, got {a.shape}")
+    with tracer_of(adapter).span("io.write_matrix_array_batch", table=name,
+                                 cells=int(a.size), batch=int(a.shape[0])):
+        adapter.create_table(name, ARRAY_BATCH_COLUMNS, temp=temp)
+        adapter.bulk_insert(name, [(k, matrix_to_json(a[k]))
+                                   for k in range(a.shape[0])])
+        _count_ingest(adapter, a)
+
+
 def write_matrix_json(adapter: Adapter, name: str, x) -> None:
     """The JSON-array ingestion path (``SQLiteAdapter.insert_matrix_json``):
     the (i, j, v) expansion happens inside the engine via ``json_each``.
@@ -222,6 +275,13 @@ def update_matrix_delta(adapter: Adapter, name: str, x) -> int | None:
     if a.ndim != 2 or adapter.matrix_meta.get(name) != ("relational",
                                                         a.shape):
         return None
+    if not adapter.cache_fresh(name):
+        # a sibling pooled connection rewrote the relation since our copy
+        # was recorded — patching cells on top of ITS content would write
+        # a silent mix of two matrices; drop our caches (no generation
+        # bump: the resident content is valid) and force the full path
+        adapter.forget(name)
+        return None
     prev = adapter.matrix_cache.get(name)
     tr = tracer_of(adapter)
     if prev is not None and 0 < a.size <= DELTA_MAX_CELLS:
@@ -234,10 +294,9 @@ def update_matrix_delta(adapter: Adapter, name: str, x) -> int | None:
                 adapter.update_cells(name, changed, a.ravel()[changed],
                                      a.shape)
         _register_matrix(adapter, name, a, "relational")
-        adapter.counters["delta_updates"] = \
-            adapter.counters.get("delta_updates", 0) + 1
-        adapter.counters["ingest_bytes"] += int(changed.size) * 8
-        adapter.counters["ingest_cells"] += int(changed.size)
+        adapter.add_counters(delta_updates=1,
+                             ingest_bytes=int(changed.size) * 8,
+                             ingest_cells=int(changed.size))
         return int(changed.size) * 8
     with tr.span("io.update_matrix", table=name, mode="rewrite",
                  cells=int(a.size)):
@@ -255,14 +314,17 @@ def update_matrix_array(adapter: Adapter, name: str, x) -> bool:
     a = np.asarray(x, dtype=np.float64)
     if a.ndim != 2 or adapter.matrix_meta.get(name) != ("array", a.shape):
         return False
+    if not adapter.cache_fresh(name):
+        adapter.forget(name)  # sibling write — see update_matrix_delta
+        return False
     with tracer_of(adapter).span("io.update_matrix_array", table=name,
                                  cells=int(a.size)):
         adapter.execute(
             f"update {_check_ident(name)} set m = {adapter.placeholder}",
             (matrix_to_json(a),))
+    adapter.bump_gen(name)  # content changed under sibling caches
     _register_matrix(adapter, name, a, "array", cache=False)
-    adapter.counters["delta_updates"] = \
-        adapter.counters.get("delta_updates", 0) + 1
+    adapter.add_counters(delta_updates=1)
     _count_ingest(adapter, a)
     return True
 

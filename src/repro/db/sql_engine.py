@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import hashlib
 import os
+import threading
 import time
 from typing import Callable
 
@@ -126,6 +127,7 @@ class SQLEngine:
         if tracer is not None:
             self.adapter.tracer = tracer
         self._eval_steps = 0      # traced-evaluation counter (metric_points)
+        self._steps_lock = threading.Lock()   # exact totals under the pool
 
     # -- representation conversion (Engine-compatible no-ops) ---------------
     def lift(self, x):
@@ -135,7 +137,8 @@ class SQLEngine:
         return x
 
     # -- evaluation ---------------------------------------------------------
-    def _write_env(self, roots: list[E.Expr], env: dict) -> dict:
+    def _write_env(self, roots: list[E.Expr], env: dict,
+                   names=None) -> dict:
         """Materialise every free Var of the DAG as its stored relation.
         Leaves whose content digest matches what is already in the database
         are skipped — in an iteration loop only the weights move, the data
@@ -143,25 +146,49 @@ class SQLEngine:
         already resident go through the bound-parameter delta path
         (:func:`repro.db.relation_io.update_matrix_delta` /
         ``update_matrix_array``) instead of DROP+CREATE re-ingestion.
-        Digests live on the adapter (``matrix_digests``) and are
-        invalidated by any ``create_table`` on the same name, so direct
-        writes (db.train) can't go stale.  Returns the ingest accounting
-        the ``sql.ingest`` span reports."""
+        Digests live on the adapter (``matrix_digests``) and are trusted
+        only while the table's shared generation is unchanged
+        (``adapter.cache_fresh``) — a sibling pooled connection's write
+        flips them stale; if the sibling wrote exactly the content we
+        want (shared weights, fanned out), the leaf is ADOPTED without a
+        rewrite.  ``names`` restricts ingestion to a subset of the free
+        Vars (the batched path writes its request leaves separately).
+        Returns the ingest accounting the ``sql.ingest`` span reports."""
         stored = self.adapter.matrix_digests
         array_rep = self.representation == "array"
         info = {"leaves": 0, "skipped": 0, "delta_updates": 0,
                 "bytes_written": 0, "bytes_saved": 0}
         for v in E.free_vars(*roots):
+            if names is not None and v.name not in names:
+                continue
             if v.name not in env:
                 raise KeyError(f"env missing leaf table {v.name!r}")
             raw = env[v.name]
             info["leaves"] += 1
             d = _digest(raw, self.representation)
             a = np.ascontiguousarray(np.asarray(raw, dtype=np.float64))
-            if stored.get(v.name) == d:
+            fresh = self.adapter.cache_fresh(v.name)
+            if fresh and stored.get(v.name) == d:
                 info["skipped"] += 1
                 info["bytes_saved"] += a.nbytes
                 continue
+            if not fresh:
+                # drop OUR stale caches (no generation bump — the
+                # resident content is a sibling's valid write) …
+                self.adapter.forget(v.name)
+                if self.adapter.shared_digest(v.name) == d:
+                    # … and if the sibling wrote exactly this content,
+                    # adopt the resident table instead of rewriting it
+                    # (cache=False: its ingestion path may have round-
+                    # tripped values, so no diff base is kept)
+                    stored[v.name] = d
+                    if a.ndim == 2:
+                        relation_io._register_matrix(
+                            self.adapter, v.name, a, self.representation,
+                            cache=False)
+                    info["skipped"] += 1
+                    info["bytes_saved"] += a.nbytes
+                    continue
             stored.pop(v.name, None)
             if array_rep:
                 if relation_io.update_matrix_array(self.adapter, v.name, a):
@@ -180,18 +207,24 @@ class SQLEngine:
                     info["bytes_written"] += written
                     info["bytes_saved"] += a.nbytes - written
             stored[v.name] = d
+            self.adapter.record_digest(v.name, d)
         return info
 
-    def _render(self, roots: list[E.Expr]) -> sqlgen.Plan:
+    def _render(self, roots: list[E.Expr], batch=None) -> sqlgen.Plan:
         """Multi-root evaluation plan via the plan cache (or direct on
-        miss): spool steps first, then the main WITH query."""
+        miss): spool steps first, then the main WITH query.  ``batch``
+        names the batched leaf Vars — part of the cache key, but the
+        batch *size* never appears in the rendered text."""
         if self.plans is not None:
             return self.plans.dag_plan(roots, self.dialect,
                                        tail="multi_root", fuse=self.fuse,
-                                       spool=self.spool)
+                                       spool=self.spool,
+                                       batch=batch or ())
         return sqlgen.render_plan(
-            roots, select=sqlgen.multi_root_tail(roots, self.dialect),
-            dialect=self.dialect, fuse=self.fuse, spool=self.spool)
+            roots,
+            select=sqlgen.multi_root_tail(roots, self.dialect, batch=batch),
+            dialect=self.dialect, fuse=self.fuse, spool=self.spool,
+            batch=batch)
 
     def _plan_key(self, roots: list[E.Expr]) -> str:
         """The cache key ``evaluate`` queries run under (multi-root tail).
@@ -267,8 +300,9 @@ class SQLEngine:
         """Per-evaluation telemetry on a collecting tracer: the latency
         histogram plus the ``metric_points`` time-series entries (plan-cache
         hit rate, bytes ingested) the regression/report layer reads."""
-        self._eval_steps += 1
-        step = self._eval_steps
+        with self._steps_lock:
+            self._eval_steps += 1
+            step = self._eval_steps
         tr.observe("sql.evaluate_ms", dt_s * 1e3)
         tr.point("sql.evaluate_ms", dt_s * 1e3, step=step,
                  dialect=self.dialect.name)
@@ -320,6 +354,113 @@ class SQLEngine:
             self._record_eval_metrics(tr, time.perf_counter() - t_eval0,
                                       ingest)
             return outs
+
+    # -- batched (multi-tenant) evaluation ----------------------------------
+    def _write_batch(self, batch_env: dict) -> int:
+        """Ingest the batched request leaves — ``name → (B, rows, cols)``
+        stack — as per-connection TEMP tables carrying the ``b`` column.
+        Returns B.  Temp tables shadow any resident relation of the same
+        name for this connection only, so pooled siblings (and later
+        unbatched evaluations, which re-create the main table) are
+        unaffected."""
+        sizes = set()
+        for name, stack in batch_env.items():
+            a = np.asarray(stack, dtype=np.float64)
+            if a.ndim != 3:
+                raise ValueError(
+                    f"batched leaf {name!r} must be a (B, rows, cols) "
+                    f"stack, got shape {a.shape}")
+            sizes.add(int(a.shape[0]))
+            if self.representation == "array":
+                relation_io.write_matrix_array_batch(self.adapter, name, a)
+            else:
+                relation_io.write_matrix_batch(self.adapter, name, a)
+        if len(sizes) != 1:
+            raise ValueError(
+                f"batched leaves disagree on batch size: {sorted(sizes)}")
+        return sizes.pop()
+
+    def _decode_batched(self, rows, roots: list[E.Expr],
+                        nb: int) -> list[np.ndarray]:
+        """Result rows → one ``(B, rows, cols)`` stack per root.  Batched
+        roots arrive with their 0-based ``b``; roots of unbatched (shared)
+        subgraphs are tagged ``b = -1`` — computed once by the engine,
+        broadcast across the batch here."""
+        outs = [np.zeros((nb,) + root.shape, dtype=np.float64)
+                for root in roots]
+        if self.representation == "array":
+            for r, b, m in rows:
+                mat = json_to_matrix(m)
+                if int(b) < 0:
+                    outs[int(r)][:] = mat
+                else:
+                    outs[int(r)][int(b)] = mat
+            return outs
+        if not len(rows):
+            return outs
+        arr = np.asarray(rows, dtype=np.float64)
+        r = arr[:, 0].astype(np.int64)
+        b = arr[:, 1].astype(np.int64)
+        i = arr[:, 2].astype(np.int64) - 1
+        j = arr[:, 3].astype(np.int64) - 1
+        for k, out in enumerate(outs):
+            m = (r == k) & (b >= 0)
+            out[b[m], i[m], j[m]] = arr[m, 4]
+            mb = (r == k) & (b < 0)
+            if mb.any():
+                base = np.zeros(roots[k].shape, dtype=np.float64)
+                base[i[mb], j[mb]] = arr[mb, 4]
+                out[:] = base
+        return outs
+
+    def evaluate_batched(self, roots: list[E.Expr], env: dict,
+                         batch_env: dict) -> list[np.ndarray]:
+        """ONE query, B independent requests (the multi-tenant tier).
+
+        ``batch_env`` maps request-leaf names to ``(B, rows, cols)``
+        stacks; ``env`` supplies the shared leaves (weights) exactly as in
+        :meth:`evaluate` — they are ingested once and joined without a
+        ``b`` predicate, so every request reads the same resident
+        relations.  Returns one ``(B, rows, cols)`` stack per root,
+        request ``k`` of the output identical (≤ float64 noise) to
+        ``evaluate`` on request ``k`` alone.  The rendered plan carries no
+        literal B — one cached entry serves every batch size, including
+        B=1 and a ragged final micro-batch.  The whole round trip holds
+        the adapter lock: concurrent callers serialize per connection
+        (use a :class:`repro.db.adapter.ConnectionPool` to overlap)."""
+        if not batch_env:
+            raise ValueError("batch_env must name at least one batched leaf")
+        batch = tuple(sorted(batch_env))
+        free = {v.name for v in E.free_vars(*roots)}
+        unknown = set(batch) - free
+        if unknown:
+            raise KeyError(f"batched leaves not free in the DAG: "
+                           f"{sorted(unknown)}")
+        shared = free - set(batch)
+        tr = tracer_of(self, self.adapter)
+        with self.adapter.lock:
+            if not tr.enabled:
+                self._write_env(roots, env, names=shared)
+                nb = self._write_batch(batch_env)
+                rows = self._run_plan(self._render(roots, batch=batch))
+                return self._decode_batched(rows, roots, nb)
+            t_eval0 = time.perf_counter()
+            with tr.span("sql.evaluate_batched",
+                         **self._root_attrs(roots)) as root_sp:
+                with tr.span("sql.ingest") as ing_sp:
+                    ingest = self._write_env(roots, env, names=shared)
+                    nb = self._write_batch(batch_env)
+                    ing_sp.set(batch=nb, **ingest)
+                with tr.span("sql.render"):
+                    plan = self._render(roots, batch=batch)
+                rows = self._run_plan(plan)
+                with tr.span("sql.decode"):
+                    outs = self._decode_batched(rows, roots, nb)
+                root_sp.set(rows_returned=len(rows), batch=nb,
+                            spool_steps=len(plan.steps))
+                self._record_eval_metrics(
+                    tr, time.perf_counter() - t_eval0, ingest)
+                return outs
 
     def eval_fn(self, roots: list[E.Expr]) -> Callable:
         """Evaluator with the Engine.eval_fn contract (no jit — the

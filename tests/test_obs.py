@@ -852,3 +852,75 @@ def test_report_cli_on_chrome_trace(tmp_path, capsys):
     assert "observability report (chrome-trace)" in out
     assert "profile" in out or "MatMul" in out
     assert "sql.evaluate_ms" in out
+
+
+# ---------------------------------------------------------------------------
+# exact counter totals under threads (the pool-readiness bugfix)
+# ---------------------------------------------------------------------------
+
+def test_tracer_counters_exact_under_threads():
+    tr = obs.Tracer()
+    n_threads, n_iters = 8, 200
+
+    def work():
+        for _ in range(n_iters):
+            tr.inc("c")
+            tr.inc("big", 3)
+            tr.observe("h", 1.0)
+
+    ts = [threading.Thread(target=work) for _ in range(n_threads)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert tr.counters["c"] == n_threads * n_iters
+    assert tr.counters["big"] == 3 * n_threads * n_iters
+    assert tr.histograms["h"]["count"] == n_threads * n_iters
+
+
+def test_adapter_counters_exact_under_threads():
+    """adapter.counters read-modify-writes are serialized on the
+    connection lock (execute) / add_counters — totals must be exact."""
+    from repro.db.adapter import SQLiteAdapter
+
+    ad = SQLiteAdapter(":memory:")
+    ad.create_table("t", (("v", "integer"),))
+    base = ad.counters["queries"]
+    n_threads, n_iters = 6, 100
+
+    def work():
+        for k in range(n_iters):
+            ad.execute("insert into t values (?)", (k,))
+            ad.add_counters(ingest_cells=2)
+
+    ts = [threading.Thread(target=work) for _ in range(n_threads)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert ad.counters["queries"] - base == n_threads * n_iters
+    assert ad.counters["ingest_cells"] == 2 * n_threads * n_iters
+    ad.close()
+
+
+def test_engine_eval_steps_exact_under_threads(tmp_path):
+    """SQLEngine._eval_steps feeds metric_points step indices; N traced
+    evaluations from N threads must land N distinct steps."""
+    x = E.var("x", (2, 2))
+    y = E.sigmoid(x)
+    tr = obs.Tracer()
+    engines = [SQLEngine("sqlite", plan_cache_=False, tracer=tr)
+               for _ in range(4)]
+    # one engine per thread (separate connections), shared step counter
+    shared_lock = engines[0]._steps_lock
+    for e in engines[1:]:
+        e._steps_lock = shared_lock
+        e.__dict__["_eval_steps"] = 0
+
+    def bump_like(e):
+        for _ in range(25):
+            e.evaluate([y], {"x": np.eye(2)})
+
+    ts = [threading.Thread(target=bump_like, args=(e,)) for e in engines]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    steps = [p.step for p in tr.points if p.metric == "sql.evaluate_ms"]
+    assert len(steps) == 4 * 25
+    for e in engines:
+        e.close()

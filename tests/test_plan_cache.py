@@ -456,3 +456,64 @@ class TestCachedDifferential:
         for k in ("w_xh", "w_ho"):
             np.testing.assert_array_equal(r1.weights[k], r2.weights[k])
         monkeypatch.setattr(pc_mod, "_default", None)   # don't leak singleton
+
+
+class TestConcurrency:
+    def test_hammer_pooled_workers(self, tmp_path):
+        """N threads × hot/cold keys against one capped store: exact
+        hit+miss accounting, no exceptions, no lost hot plans, and both
+        layers end at/below the cap — the eviction-vs-disk-hit and
+        double-insert races the lock closes."""
+        import threading
+
+        cache = PlanCache(path=str(tmp_path / "hammer.db"), cap=8)
+        rounds, workers = 60, 6
+        errs = []
+
+        def work(wid):
+            try:
+                for k in range(rounds):
+                    key = f"k{(wid * rounds + k) % 24}"
+                    sql = cache.get(key)
+                    if sql is None:
+                        cache.put(key, f"select {key}")
+                    cache.rendered(f"hot{k % 2}", "sqlite",
+                                   lambda: "select 1")
+            except Exception as exc:  # pragma: no cover - the bug
+                errs.append(exc)
+
+        ts = [threading.Thread(target=work, args=(w,))
+              for w in range(workers)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert not errs
+        # every get() and every rendered() accounted exactly once
+        assert cache.hits + cache.misses == workers * rounds * 2
+        assert len(cache) <= cache.cap and len(cache._mem) <= cache.cap
+        # the hot keys must have survived the churn
+        assert cache.get("hot0") == "select 1"
+        cache.close()
+
+    def test_rendered_single_render_per_key(self):
+        """Concurrent misses on one key render once — the second worker
+        hits the first one's insert instead of double-rendering."""
+        import threading
+
+        cache = PlanCache(path=None)
+        calls = []
+
+        def render():
+            calls.append(1)
+            return "select 42"
+
+        barrier = threading.Barrier(4)
+
+        def work():
+            barrier.wait()
+            assert cache.rendered("the-key", "sqlite", render) == "select 42"
+
+        ts = [threading.Thread(target=work) for _ in range(4)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert len(calls) == 1
+        assert cache.hits == 3 and cache.misses == 1

@@ -1,0 +1,352 @@
+"""Multi-tenant batched serving: one plan, B requests.
+
+Differential guarantees for the ``b``-column codec and the serving tier:
+
+* a B-request batched plan matches B independent ``evaluate`` calls
+  (≤1e-4; observed exact) for the MLP forward, forward+gradient, and a
+  zoo gating layer, on sqlite relational AND array representations
+  (duckdb in the CI extras job);
+* B=1 and a smaller follow-up batch ride the SAME cached plan — the
+  rendered text carries no literal B;
+* unbatched (shared-weight) subgraph roots come back tagged ``b = -1``
+  and broadcast across the batch;
+* the ``SQLBatchServer`` queue resolves per-request futures to exactly
+  the sequential results, including a ragged last micro-batch;
+* the pool bugfixes hold: WAL mode on file-backed sqlite pools,
+  cross-thread connection use, stale ``matrix_cache`` detection across
+  pooled connections.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import autodiff, nn2sql
+from repro.core import expr as E
+from repro.core import sqlgen
+from repro.db import HAVE_DUCKDB
+from repro.db.adapter import ConnectionPool, SQLiteAdapter
+from repro.db.plan_cache import PlanCache
+from repro.db.sql_engine import SQLEngine
+from repro.serving.db_serve import SQLBatchServer
+
+RNG = np.random.RandomState(11)
+TOL = 1e-4
+
+BACKENDS = ["sqlite"] + (["duckdb"] if HAVE_DUCKDB else [])
+
+
+def mlp_graph(n_rows=4, n_hidden=5):
+    spec = nn2sql.MLPSpec(n_rows=n_rows, n_features=6, n_hidden=n_hidden,
+                          n_classes=3, lr=0.1)
+    g = nn2sql.build_graph(spec)
+    w = {k: np.asarray(v, dtype=np.float64)
+         for k, v in nn2sql.init_weights(spec).items()}
+    return g, w, spec
+
+
+def batch_inputs(spec, nb):
+    imgs = RNG.rand(nb, spec.n_rows, spec.n_features)
+    labels = RNG.randint(0, spec.n_classes, (nb, spec.n_rows))
+    one_hots = np.eye(spec.n_classes)[labels]
+    return imgs, one_hots
+
+
+def sequential(eng, roots, shared, batch_env, nb):
+    outs = []
+    for k in range(nb):
+        env = dict(shared)
+        env.update({n: s[k] for n, s in batch_env.items()})
+        outs.append(eng.evaluate(roots, env))
+    return [np.stack([o[r] for o in outs]) for r in range(len(roots))]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("dialect", [None, "array"])
+class TestBatchedDifferential:
+    def _engine(self, backend, dialect):
+        return SQLEngine(backend, dialect=dialect, plan_cache_=False)
+
+    def test_mlp_forward(self, backend, dialect):
+        g, w, spec = mlp_graph()
+        imgs, _ = batch_inputs(spec, 8)
+        with self._engine(backend, dialect) as eng:
+            batched = eng.evaluate_batched([g.a_ho], w, {"img": imgs})
+            seq = sequential(eng, [g.a_ho], w, {"img": imgs}, 8)
+        assert np.abs(batched[0] - seq[0]).max() <= TOL
+
+    def test_mlp_forward_and_grad(self, backend, dialect):
+        g, w, spec = mlp_graph()
+        grads = autodiff.gradients(g.loss, [g.w_xh, g.w_ho])
+        roots = [g.loss, grads[g.w_xh], grads[g.w_ho]]
+        imgs, one_hots = batch_inputs(spec, 3)
+        be = {"img": imgs, "one_hot": one_hots}
+        with self._engine(backend, dialect) as eng:
+            batched = eng.evaluate_batched(roots, w, be)
+            seq = sequential(eng, roots, w, be, 3)
+        for b, s in zip(batched, seq):
+            assert np.abs(b - s).max() <= TOL
+
+    def test_zoo_gating_layer(self, backend, dialect):
+        """Softmax → ArgTopK → Hadamard → RowReduce: the MoE gate, whose
+        batched spellings partition ranks and denominators per request."""
+        x = E.var("x", (4, 6))
+        wg = E.var("wg", (6, 5))
+        gate = E.softmax(E.matmul(x, wg, name="logits"))
+        mask = E.argtopk(gate, 2)
+        top = E.hadamard(gate, mask)
+        load = E.row_reduce(mask, kind="sum", axis=0)
+        roots = [top, load]
+        shared = {"wg": RNG.randn(6, 5)}
+        xs = RNG.randn(5, 4, 6)
+        with self._engine(backend, dialect) as eng:
+            batched = eng.evaluate_batched(roots, shared, {"x": xs})
+            seq = sequential(eng, roots, shared, {"x": xs}, 5)
+        for b, s in zip(batched, seq):
+            assert np.abs(b - s).max() <= TOL
+
+    def test_batch_of_one(self, backend, dialect):
+        g, w, spec = mlp_graph()
+        imgs, _ = batch_inputs(spec, 1)
+        with self._engine(backend, dialect) as eng:
+            batched = eng.evaluate_batched([g.a_ho], w, {"img": imgs})
+            plain = eng.evaluate([g.a_ho], {**w, "img": imgs[0]})
+        assert batched[0].shape == (1,) + g.a_ho.shape
+        assert np.abs(batched[0][0] - plain[0]).max() <= TOL
+
+
+class TestOnePlanManySizes:
+    def test_plan_cache_shared_across_batch_sizes(self):
+        """The tentpole invariant: the rendered text carries no literal B,
+        so B=8, B=1 and a ragged B=3 all hit ONE cache entry."""
+        g, w, spec = mlp_graph()
+        cache = PlanCache(path=None)
+        with SQLEngine("sqlite", plan_cache_=cache) as eng:
+            for nb in (8, 1, 3):
+                imgs, _ = batch_inputs(spec, nb)
+                out = eng.evaluate_batched([g.a_ho], w, {"img": imgs})
+                assert out[0].shape == (nb,) + g.a_ho.shape
+        assert cache.misses == 1 and cache.hits == 2
+
+    def test_batched_key_differs_from_unbatched(self):
+        g, w, spec = mlp_graph()
+        cache = PlanCache(path=None)
+        with SQLEngine("sqlite", plan_cache_=cache) as eng:
+            imgs, _ = batch_inputs(spec, 2)
+            eng.evaluate_batched([g.a_ho], w, {"img": imgs})
+            eng.evaluate([g.a_ho], {**w, "img": imgs[0]})
+        assert cache.misses == 2   # batch:<names> is part of the key
+
+    def test_rendered_text_has_no_batch_size(self):
+        g, _, _ = mlp_graph()
+        sql = sqlgen.to_sql([g.a_ho], batch=("img",))
+        for token in ("b = 0", "b = 7", " 8 "):
+            assert token not in sql
+
+
+class TestBroadcastAndErrors:
+    def test_unbatched_root_broadcasts(self):
+        x = E.var("x", (2, 3))
+        w = E.var("w", (3, 3))
+        y = E.matmul(x, w, name="y")
+        s = E.sigmoid(w)            # no batched leaf upstream
+        shared = {"w": RNG.randn(3, 3)}
+        xs = RNG.randn(4, 2, 3)
+        with SQLEngine("sqlite", plan_cache_=False) as eng:
+            ys, ss = eng.evaluate_batched([y, s], shared, {"x": xs})
+        expect = 1.0 / (1.0 + np.exp(-shared["w"]))
+        assert ss.shape == (4, 3, 3)
+        for k in range(4):
+            assert np.abs(ss[k] - expect).max() <= TOL
+            assert np.abs(ys[k] - xs[k] @ shared["w"]).max() <= TOL
+
+    def test_batched_scan_raises(self):
+        a = E.var("a", (4, 3))
+        b = E.var("b", (4, 3))
+        scan = E.recurrence(a, b)
+        with pytest.raises(NotImplementedError):
+            sqlgen.to_sql([scan], batch=("b",))
+
+    def test_mismatched_batch_sizes_rejected(self):
+        x = E.var("x", (2, 2))
+        z = E.var("z", (2, 2))
+        y = E.add(x, z)
+        with SQLEngine("sqlite", plan_cache_=False) as eng:
+            with pytest.raises(ValueError, match="batch size"):
+                eng.evaluate_batched(
+                    [y], {}, {"x": np.zeros((2, 2, 2)),
+                              "z": np.zeros((3, 2, 2))})
+
+    def test_unknown_batch_var_rejected(self):
+        x = E.var("x", (2, 2))
+        with SQLEngine("sqlite", plan_cache_=False) as eng:
+            with pytest.raises(KeyError):
+                eng.evaluate_batched([E.sigmoid(x)],
+                                     {"x": np.zeros((2, 2))},
+                                     {"nope": np.zeros((1, 2, 2))})
+
+
+class TestBatchServer:
+    def _graph(self):
+        x = E.var("x", (2, 6))
+        w1 = E.var("w1", (6, 5))
+        w2 = E.var("w2", (5, 3))
+        y = E.softmax(E.matmul(E.sigmoid(E.matmul(x, w1, name="h")),
+                               w2, name="o"))
+        return y, {"w1": RNG.randn(6, 5), "w2": RNG.randn(5, 3)}
+
+    def test_futures_match_sequential(self):
+        y, shared = self._graph()
+        xs = [RNG.randn(2, 6) for _ in range(9)]
+        with SQLBatchServer([y], ["x"], shared, pool_size=2,
+                            plan_cache_=False) as srv:
+            futs = [srv.submit({"x": xi}, tenant=f"t{k % 3}")
+                    for k, xi in enumerate(xs)]
+            got = [f.result(timeout=60) for f in futs]
+        with SQLEngine("sqlite", plan_cache_=False) as eng:
+            for xi, res in zip(xs, got):
+                ref = eng.evaluate([y], {**shared, "x": xi})
+                assert np.abs(res[0] - ref[0]).max() <= TOL
+
+    def test_ragged_last_micro_batch(self):
+        """max_batch=4, six requests on one worker: the group sequence is
+        ragged whatever the window does — every future still resolves to
+        its own request's exact result."""
+        y, shared = self._graph()
+        xs = [RNG.randn(2, 6) for _ in range(6)]
+        with SQLBatchServer([y], ["x"], shared, pool_size=1, max_batch=4,
+                            window_ms=20.0, plan_cache_=False) as srv:
+            futs = [srv.submit({"x": xi}) for xi in xs]
+            got = [f.result(timeout=60) for f in futs]
+        with SQLEngine("sqlite", plan_cache_=False) as eng:
+            for xi, res in zip(xs, got):
+                ref = eng.evaluate([y], {**shared, "x": xi})
+                assert np.abs(res[0] - ref[0]).max() <= TOL
+
+    def test_bad_request_leaves_rejected(self):
+        y, shared = self._graph()
+        with SQLBatchServer([y], ["x"], shared, pool_size=1,
+                            plan_cache_=False) as srv:
+            with pytest.raises(KeyError):
+                srv.submit({"wrong": np.zeros((2, 6))})
+
+    def test_missing_shared_env_rejected(self):
+        y, _ = self._graph()
+        with pytest.raises(KeyError, match="shared_env"):
+            SQLBatchServer([y], ["x"], {"w1": np.zeros((6, 5))})
+
+
+class TestPoolBugfixes:
+    def test_file_pool_wal_mode(self, tmp_path):
+        db = str(tmp_path / "pool.db")
+        pool = ConnectionPool("sqlite", db, size=3)
+        try:
+            assert len(pool) == 3
+            for ad in pool:
+                mode, = ad.execute("pragma journal_mode")[0]
+                assert str(mode).lower() == "wal"
+                assert ad._db_key == pool[0]._db_key
+        finally:
+            pool.close()
+
+    def test_cross_thread_connection_use(self):
+        """check_same_thread=False + the per-connection lock: another
+        thread may run statements on this connection."""
+        import threading
+        ad = SQLiteAdapter(":memory:")
+        ad.create_table("t", (("v", "integer"),))
+        errs = []
+
+        def work():
+            try:
+                for k in range(50):
+                    ad.execute("insert into t values (?)", (k,))
+            except Exception as exc:  # pragma: no cover - the bug
+                errs.append(exc)
+
+        ts = [threading.Thread(target=work) for _ in range(4)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert not errs
+        assert ad.execute("select count(*) from t")[0][0] == 200
+        ad.close()
+
+    def test_two_connection_stale_matrix_cache(self, tmp_path):
+        """PR-7 regression: adapter A's retained diff base goes stale when
+        sibling B rewrites the relation — pre-fix, A's next delta update
+        patched only ITS changed cells on top of B's content."""
+        from repro.db import relation_io
+        db = str(tmp_path / "shared.db")
+        a = SQLiteAdapter(db)
+        b = SQLiteAdapter(db)
+        m0 = np.arange(12, dtype=np.float64).reshape(3, 4)
+        relation_io.write_matrix(a, "w", m0)      # A caches m0 as diff base
+        a.commit()
+        assert "w" in a.matrix_cache
+        relation_io.write_matrix(b, "w", m0 + 100.0)   # sibling rewrite
+        b.commit()
+        m2 = m0.copy()
+        m2[0, 0] = -5.0                     # one cell differs from A's base
+        assert relation_io.update_matrix_delta(a, "w", m2) is None
+        relation_io.write_matrix(a, "w", m2)    # caller fallback
+        a.commit()
+        got = relation_io.read_matrix(b, "w", (3, 4))
+        assert np.array_equal(got, m2)
+        a.close()
+        b.close()
+
+    def test_shared_digest_adoption_skips_rewrite(self, tmp_path):
+        """Two pooled engines fanning out the SAME weights must not
+        ping-pong rewrites: the second adopts the first one's write."""
+        db = str(tmp_path / "adopt.db")
+        x = E.var("x", (2, 3))
+        w = E.var("w", (3, 2))
+        y = E.matmul(x, w, name="y")
+        env = {"x": RNG.randn(2, 3), "w": RNG.randn(3, 2)}
+        e1 = SQLEngine(adapter=SQLiteAdapter(db), plan_cache_=False)
+        e1.evaluate([y], env)
+        e1.adapter.commit()
+        e2 = SQLEngine(adapter=SQLiteAdapter(db), plan_cache_=False)
+        info = e2._write_env([y], env)
+        assert info["skipped"] == 2 and info["bytes_written"] == 0
+        # and e1 stays fresh: nothing was mutated under it
+        info1 = e1._write_env([y], env)
+        assert info1["skipped"] == 2
+        e1.close()
+        e2.close()
+
+    def test_memory_registry_keys_never_reused(self):
+        """A fresh ``:memory:`` adapter must never inherit a dead
+        sibling's registry identity: with ``id(self)``-derived keys,
+        CPython address reuse let a new empty database "adopt" a shared
+        digest and skip the write — then the query found no table."""
+        seen = set()
+        for _ in range(50):
+            ad = SQLiteAdapter(":memory:")
+            assert ad._db_key not in seen
+            seen.add(ad._db_key)
+            ad.close()
+        x = E.var("x", (2, 3))
+        w = E.var("w", (3, 2))
+        y = E.matmul(x, w, name="y")
+        env = {"x": RNG.randn(2, 3), "w": RNG.randn(3, 2)}
+        for _ in range(3):               # fresh engine each round: must
+            with SQLEngine(plan_cache_=False) as eng:   # really ingest
+                out, = eng.evaluate([y], env)
+            assert np.abs(out - env["x"] @ env["w"]).max() <= TOL
+
+
+@pytest.mark.skipif(not HAVE_DUCKDB, reason="duckdb not installed")
+class TestDuckDBPool:  # pragma: no cover - exercised in the CI extras job
+    def test_cursor_pool_and_server(self):
+        y = E.sigmoid(E.matmul(E.var("x", (2, 4)), E.var("w", (4, 3)),
+                               name="y0"))
+        shared = {"w": RNG.randn(4, 3)}
+        xs = [RNG.randn(2, 4) for _ in range(5)]
+        with SQLBatchServer([y], ["x"], shared, backend="duckdb",
+                            pool_size=2, plan_cache_=False) as srv:
+            got = [srv({"x": xi}) for xi in xs]
+        with SQLEngine("duckdb", plan_cache_=False) as eng:
+            for xi, res in zip(xs, got):
+                ref = eng.evaluate([y], {**shared, "x": xi})
+                assert np.abs(res[0] - ref[0]).max() <= TOL

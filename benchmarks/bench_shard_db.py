@@ -1,0 +1,232 @@
+"""Data-parallel in-DB training benchmark (SQL AllReduce across shards).
+
+PR 10 partitions the training batch across N shard connections
+(``db/shard.py``), evaluates the cached per-shard gradient plan on each,
+and reduces the shipped gradient relations with ONE coordinator-side
+``GROUP BY (r, i, j)`` statement — the AllReduce is itself SQL.  This
+benchmark measures what sharding buys and emits ``BENCH_shard_db.json``.
+
+What the sweep shows on a single-core runner is NOT thread parallelism
+(sqlite releases the GIL, but one core runs one query at a time): the win
+is the engine's superlinear cost in batch rows — the gradient query's
+join/sort work grows faster than linearly, so N queries over n/N rows sum
+to less than one query over n.  Measured here: ~2.0 ms/row at 32 rows
+rising to ~3.7 ms/row at 1024, which makes the committed scale
+(``--rows 1024``) improve monotonically from 1 to 4 shards while 8 shards
+honestly regresses (per-query fixed cost wins).  The AllReduce itself is
+attributed from tracer spans (``shard.ship`` / ``shard.allreduce`` /
+``shard.broadcast``) — a few ms per iteration, orders below the gradient
+queries.
+
+Methodology: background load on a shared box drifts by tens of percent
+over a multi-minute sweep, which would confound shard count with whatever
+the machine was doing during that count's window.  So the sweep is
+interleaved — shard counts are visited round-robin ``--repeats`` times —
+and the headline per-iteration number is the MINIMUM warm iteration
+observed (load only ever adds time, so the min estimates the uncontended
+cost; medians across all warm iterations are reported alongside).
+
+Run:  PYTHONPATH=src python benchmarks/bench_shard_db.py
+CI smoke:  … bench_shard_db.py --rows 32 --iters 2 --shards 1,2 --repeats 1
+           (below ``--monotone-min-rows`` the monotonicity check is
+           vacuously true — at toy scale per-query overhead dominates and
+           the superlinear term has nothing to amortise)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro import obs
+from repro.core import nn2sql
+from repro.db.plan_cache import PlanCache
+from repro.db.shard import train_in_db_sharded
+from repro.obs import regress
+
+
+def run_one(graph, w, x, y, shards: int, iters: int, cache) -> dict:
+    """One sharded training run under a collecting tracer; the first
+    iteration (cold: leaf ingest + plan render) is reported separately
+    from the warm iterations the scaling claim is about."""
+    tr = obs.Tracer()
+    with obs.use(tr):
+        res = train_in_db_sharded(graph, w, x, y, iters, shards=shards,
+                                  plan_cache_=cache)
+    iter_ms = [p.value for p in tr.points if p.metric == "shard.iter_ms"]
+    warm = iter_ms[1:] or iter_ms
+
+    def span_ms(name):
+        return sum(s.duration for s in tr.spans if s.name == name) \
+            * 1e3 / max(iters, 1)
+
+    return {
+        "cold_iter_ms": iter_ms[0],
+        "warm_iters_ms": warm,
+        # the AllReduce, attributed per iteration from tracer spans
+        "ship_ms": span_ms("shard.ship"),
+        "allreduce_ms": span_ms("shard.allreduce"),
+        "broadcast_ms": span_ms("shard.broadcast"),
+        "grad_ms": span_ms("shard.grad"),   # summed across shard threads
+        "shipped_bytes_per_iter": res.cte_bytes // max(iters, 1),
+        "weights": res.weights,
+    }
+
+
+def run(args) -> dict:
+    rng = np.random.default_rng(args.seed)
+    spec = nn2sql.MLPSpec(n_rows=args.rows, n_features=args.features,
+                          n_hidden=args.hidden, n_classes=args.classes,
+                          lr=0.01)
+    graph = nn2sql.build_graph(spec)
+    w = {"w_xh": rng.normal(0, 0.3, (args.features, args.hidden)),
+         "w_ho": rng.normal(0, 0.3, (args.hidden, args.classes))}
+    x = rng.normal(0, 1, (args.rows, args.features))
+    y = np.eye(args.classes)[rng.integers(0, args.classes, args.rows)]
+    counts = [int(c) for c in args.shards.split(",") if c]
+    cache = PlanCache(path=None)
+    cores = os.cpu_count() or 1
+
+    print(f"== sharded in-DB training: {args.rows}x{args.features} -> "
+          f"{args.hidden} -> {args.classes}, {args.iters} iters x "
+          f"{args.repeats} interleaved repeats, shards {counts}, "
+          f"{cores} core(s) ==")
+
+    # interleaved sweep: visit every shard count once per repeat so load
+    # drift on the box lands on all counts alike, not on whichever count
+    # happened to own a contiguous time window
+    runs = {n: [] for n in counts}
+    for rep in range(args.repeats):
+        for n in counts:
+            runs[n].append(run_one(graph, w, x, y, n, args.iters, cache))
+            print(f"  repeat {rep}: shards={n:2d} warm "
+                  f"{min(runs[n][-1]['warm_iters_ms']):8.1f} ms/iter",
+                  flush=True)
+
+    def med(vals):
+        return sorted(vals)[len(vals) // 2]
+
+    sweep = []
+    for n in counts:
+        rs = runs[n]
+        warm_all = [t for r in rs for t in r["warm_iters_ms"]]
+        sweep.append({
+            "shards": n,
+            "iters": args.iters,
+            "repeats": args.repeats,
+            "warm_iter_ms": min(warm_all),      # the headline: best observed
+            "warm_iter_ms_median": med(warm_all),
+            "warm_iters_ms": warm_all,
+            "cold_iter_ms": min(r["cold_iter_ms"] for r in rs),
+            "ship_ms": med([r["ship_ms"] for r in rs]),
+            "allreduce_ms": med([r["allreduce_ms"] for r in rs]),
+            "broadcast_ms": med([r["broadcast_ms"] for r in rs]),
+            "grad_ms": med([r["grad_ms"] for r in rs]),
+            "shipped_bytes_per_iter": rs[0]["shipped_bytes_per_iter"],
+            "weights": rs[0]["weights"],
+        })
+    for r in sweep:
+        print(f"shards={r['shards']:2d}: warm {r['warm_iter_ms']:8.1f} "
+              f"ms/iter min ({r['warm_iter_ms_median']:8.1f} median)  "
+              f"ship {r['ship_ms']:5.1f}  allreduce {r['allreduce_ms']:5.1f}"
+              f"  broadcast {r['broadcast_ms']:4.1f} ms/iter", flush=True)
+
+    # drop-in equivalence across the sweep: every shard count trains to
+    # the same weights (float summation order is the only difference)
+    base = sweep[0].pop("weights")
+    max_diff = 0.0
+    for r in sweep[1:]:
+        wts = r.pop("weights")
+        max_diff = max(max_diff,
+                       max(float(np.abs(wts[k] - base[k]).max())
+                           for k in base))
+    print(f"max weight divergence across shard counts: {max_diff:.2e}")
+
+    by_n = {r["shards"]: r for r in sweep}
+    s1 = by_n.get(1) or sweep[0]
+    s4 = by_n.get(4) or sweep[-1]
+
+    # monotone 1 -> 4: only meaningful where the superlinear row cost has
+    # something to amortise — below the gate (CI smoke scale) per-query
+    # overhead dominates and the check is vacuously true
+    gated = args.rows >= args.monotone_min_rows
+    mono = True
+    path = [r for r in sweep if r["shards"] <= 4]
+    if gated:
+        for a, b in zip(path, path[1:]):
+            mono = mono and (b["warm_iter_ms"]
+                             <= a["warm_iter_ms"] * (1 + args.monotone_slack))
+
+    report = {
+        "config": {"rows": args.rows, "features": args.features,
+                   "hidden": args.hidden, "classes": args.classes,
+                   "iters": args.iters, "repeats": args.repeats,
+                   "shards": counts,
+                   "seed": args.seed, "cores": cores,
+                   "monotone_min_rows": args.monotone_min_rows,
+                   "monotone_gated": gated},
+        "sweep": sweep,
+        "metrics": {
+            "shard_db.iter_ms_s1":
+                regress.metric(s1["warm_iter_ms"], "ms", "lower"),
+            "shard_db.iter_ms_s4":
+                regress.metric(s4["warm_iter_ms"], "ms", "lower"),
+            "shard_db.speedup_s4":
+                regress.metric(s1["warm_iter_ms"] / s4["warm_iter_ms"],
+                               "x", "higher"),
+            # coordinator-side costs are a few ms and scheduler-noisy —
+            # wide band
+            "shard_db.allreduce_ms_s4":
+                regress.metric(s4["allreduce_ms"] + s4["ship_ms"]
+                               + s4["broadcast_ms"], "ms", tolerance=4.0),
+        },
+        "checks": {
+            # the sharded runs are drop-ins for each other (and, by
+            # tests/test_shard_db.py, for the unsharded run) well inside
+            # the 1e-4 acceptance bound
+            "shard_counts_agree_1e4": max_diff <= 1e-4,
+            "iter_time_monotone_1_to_4": mono,
+            "allreduce_attributed_in_spans":
+                all(r["allreduce_ms"] > 0 for r in sweep),
+        },
+    }
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rows", type=int, default=1024,
+                    help="training batch rows (partitioned across shards)")
+    ap.add_argument("--features", type=int, default=64)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--iters", type=int, default=3,
+                    help="training iterations per run (first is cold: "
+                         "ingest + render)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="interleaved round-robin visits per shard count")
+    ap.add_argument("--shards", default="1,2,4,8",
+                    help="comma-separated shard counts to sweep")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--monotone-min-rows", type=int, default=512,
+                    help="rows below which the 1->4 monotonicity check is "
+                         "vacuously true")
+    ap.add_argument("--monotone-slack", type=float, default=0.05,
+                    help="fractional tolerance per step of the "
+                         "monotonicity check")
+    ap.add_argument("--out", default="BENCH_shard_db.json")
+    args = ap.parse_args()
+
+    report = run(args)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"\nwrote {args.out}")
+    ok = all(report["checks"].values())
+    print("checks:", report["checks"])
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -55,7 +55,19 @@ SMOKE = (
      ["benchmarks/bench_serving_db.py", "--counts", "1,2,8",
       "--requests", "24", "--clients", "4", "--timing-iters", "2",
       "--min-speedup", "2.0"]),
+    ("BENCH_shard_db.json",
+     ["benchmarks/bench_shard_db.py", "--rows", "32", "--iters", "2",
+      "--shards", "1,2", "--repeats", "1"]),
 )
+
+
+def _report_backend(report: dict) -> str | None:
+    """The engine a report actually ran on: the ``fallback_backend``
+    stamp when the requested backend was unavailable, else the config."""
+    fb = report.get("metrics", {}).get("fallback_backend")
+    if isinstance(fb, str):
+        return fb
+    return report.get("config", {}).get("backend")
 
 
 def _load(path: str) -> dict:
@@ -96,23 +108,43 @@ def main(argv=None) -> int:
 
     sections = []            # (title, deltas)
     for b_path, f_path in zip(args.baseline, args.fresh):
-        deltas = regress.compare(_load(b_path), _load(f_path),
-                                 tolerance=args.tolerance)
-        sections.append((f"{os.path.basename(b_path)} vs "
-                         f"{os.path.basename(f_path)}", deltas))
+        base, fresh = _load(b_path), _load(f_path)
+        bb, fb = _report_backend(base), _report_backend(fresh)
+        title = (f"{os.path.basename(b_path)} vs "
+                 f"{os.path.basename(f_path)}")
+        if bb and fb and bb != fb:
+            # a fallback run against a baseline from a different engine
+            # measures the backend swap, not a regression — report the
+            # deltas but gate nothing
+            deltas = regress.compare(base, fresh, tolerance=args.tolerance,
+                                     gate_directions=(),
+                                     fail_on_missing=False)
+            title += f" (backends differ: {bb} vs {fb} — not gated)"
+        else:
+            deltas = regress.compare(base, fresh,
+                                     tolerance=args.tolerance)
+        sections.append((title, deltas))
 
     if args.smoke:
         with tempfile.TemporaryDirectory() as tmp:
             for base_name, script_args in SMOKE:
                 base_path = os.path.join(ROOT, base_name)
+                base = _load(base_path)
                 fresh = _smoke_run(
                     script_args,
                     os.path.join(tmp, "fresh_" + base_name))
+                bb, fb = _report_backend(base), _report_backend(fresh)
+                title = f"{base_name} (smoke, times only)"
+                if bb and fb and bb != fb:
+                    gate = ()
+                    title = (f"{base_name} (smoke, backends differ: "
+                             f"{bb} vs {fb} — not gated)")
+                else:
+                    gate = ("lower",)
                 deltas = regress.compare(
-                    _load(base_path), fresh, tolerance=args.tolerance,
-                    gate_directions=("lower",), fail_on_missing=False)
-                sections.append((f"{base_name} (smoke, times only)",
-                                 deltas))
+                    base, fresh, tolerance=args.tolerance,
+                    gate_directions=gate, fail_on_missing=False)
+                sections.append((title, deltas))
 
     failed = False
     tables = []

@@ -897,7 +897,14 @@ def _render_refs(node: E.Expr, regions, representation: str):
     if isinstance(node, E.Softmax) and representation == "relational":
         return [(node.x, 3)]     # row max, denominator, and the cell scan
     if isinstance(node, E.Recurrence):
-        return [(node.a, 1), (node.b, 2)]   # b seeds the anchor AND steps
+        # b seeds the anchor AND steps; a is counted twice ON PURPOSE —
+        # under substitution CTE semantics (sqlite) the recursive member
+        # re-executes its reference to a at every step, so the spool pass
+        # must materialise the scan INPUT as a temp table.  That is also
+        # what makes scans COMPOSE: a nested scan's inner recursion runs
+        # once as its own spooled statement instead of being substituted
+        # into the outer recursive member.
+        return [(node.a, 2), (node.b, 2)]
     if isinstance(node, E.MatRecurrence) and representation == "array":
         return [(node.a, 2), (node.b, 2)]   # anchor + recursive member
     return [(c, 1) for c in node.children()]

@@ -4,7 +4,10 @@
 
 * :mod:`~repro.db.dialect` — SQL dialects (sql92 golden, sqlite, duckdb)
   plus the UDF array extension (the §5 analogue for stock engines);
-* :mod:`~repro.db.adapter` — thin connections over ``sqlite3`` / ``duckdb``;
+* :mod:`~repro.db.adapters` — one ``Adapter`` contract over ``sqlite3`` /
+  ``duckdb`` / ``psycopg2`` (``adapter`` is the back-compat shim);
+* :mod:`~repro.db.shard` — data-parallel training across a connection
+  pool with a SQL AllReduce (``train_in_db(shards=N)``);
 * :mod:`~repro.db.relation_io` — dense arrays ↔ ``{[i, j, v]}`` tables
   (vectorized pivots);
 * :mod:`~repro.db.plan_cache` — persistent cache of rendered SQL plans;
@@ -18,32 +21,37 @@
 Submodules that depend on :mod:`repro.core` are loaded lazily so that
 ``core`` ↔ ``db`` imports cannot cycle.
 """
-from . import adapter, dialect, relation_io
-from .adapter import Adapter, DuckDBAdapter, SQLiteAdapter, connect
+from . import adapter, adapters, dialect, relation_io
+from .adapter import (Adapter, ConnectionPool, DuckDBAdapter,
+                      PostgresAdapter, SQLiteAdapter, connect)
 from .dialect import (ARRAY_UDFS, HAVE_DUCKDB, ArrayDialect, DuckDBDialect,
-                      Sql92Dialect, SqliteDialect, get_dialect,
-                      json_to_matrix, matrix_to_json)
+                      PostgresDialect, Sql92Dialect, SqliteDialect,
+                      get_dialect, json_to_matrix, matrix_to_json)
 
 __all__ = [
-    "adapter", "dialect", "relation_io", "plan_cache", "sql_engine", "train",
-    "zoo",
-    "Adapter", "SQLiteAdapter", "DuckDBAdapter", "connect",
-    "Sql92Dialect", "SqliteDialect", "DuckDBDialect", "ArrayDialect",
-    "get_dialect",
+    "adapter", "adapters", "dialect", "relation_io", "plan_cache",
+    "sql_engine", "train", "shard", "zoo",
+    "Adapter", "SQLiteAdapter", "DuckDBAdapter", "PostgresAdapter",
+    "ConnectionPool", "connect",
+    "Sql92Dialect", "SqliteDialect", "DuckDBDialect", "PostgresDialect",
+    "ArrayDialect", "get_dialect",
     "ARRAY_UDFS", "HAVE_DUCKDB", "matrix_to_json", "json_to_matrix",
     "SQLEngine", "PlanCache", "train_in_db", "infer_in_db", "predict_in_db",
+    "train_in_db_sharded",
 ]
 
 _LAZY = {
     "plan_cache": ("repro.db.plan_cache", None),
     "sql_engine": ("repro.db.sql_engine", None),
     "train": ("repro.db.train", None),
+    "shard": ("repro.db.shard", None),
     "zoo": ("repro.db.zoo", None),
     "SQLEngine": ("repro.db.sql_engine", "SQLEngine"),
     "PlanCache": ("repro.db.plan_cache", "PlanCache"),
     "train_in_db": ("repro.db.train", "train_in_db"),
     "infer_in_db": ("repro.db.train", "infer_in_db"),
     "predict_in_db": ("repro.db.train", "predict_in_db"),
+    "train_in_db_sharded": ("repro.db.shard", "train_in_db_sharded"),
 }
 
 

@@ -1,697 +1,20 @@
-"""Thin connection adapters over the engines the container actually has.
+"""Back-compat shim — the adapter tier lives in :mod:`repro.db.adapters`.
 
-One interface, two implementations:
-
-``SQLiteAdapter`` — stdlib ``sqlite3``; always available, the default.
-``DuckDBAdapter`` — only when the ``duckdb`` package is importable.
-
-An adapter owns a connection plus the matching :mod:`repro.db.dialect`, and
-exposes exactly what the execution backend needs: ``execute`` (rows back),
-``create_table``, ``bulk_insert`` and the vectorized ``insert_columns``.
-Everything else (SQL rendering, array pivoting) lives in ``dialect`` /
-``relation_io`` so the adapters stay thin.  Both matrix representations
-ride the same methods: cell-relational ``{[i, j, v]}`` tables through
-``insert_columns``, array-representation tables (ONE row, a JSON
-array-typed ``m`` column — ``relation_io.ARRAY_COLUMNS``) through
-``bulk_insert``; ``matrix_digests`` entries embed the representation, so
-an engine switch on a shared connection always rewrites the leaf.
-
-Ingestion strategy per backend (the MNIST-scale bottleneck — see
-``benchmarks/bench_mnist_db.py``):
-
-* generic — chunked ``executemany`` over C-level ``zip`` of column
-  ``tolist()`` slices (no per-cell Python arithmetic);
-* sqlite — multi-row ``INSERT … VALUES (…),(…),…`` batches (fewer
-  statement steps; ~3× over the flat per-cell path, which is the floor the
-  row-at-a-time storage model allows);
-* duckdb — zero-loop registration of the column arrays (Arrow table when
-  ``pyarrow`` is importable, pandas/numpy dict otherwise) followed by one
-  ``INSERT INTO … SELECT``.
-"""
+Historical import sites (``from repro.db.adapter import connect``) keep
+working; new code should import from ``repro.db.adapters`` directly, where
+the contract (``adapters/base.py``) and the per-backend modules
+(``sqlite`` / ``duckdb`` / ``postgres``) are split out."""
 from __future__ import annotations
 
-import itertools
-import logging
-import os
-import re
-import sqlite3
-import threading
-import time
-from typing import Iterable, Sequence
-
-import numpy as np
-
-from ..obs import tracer_of
-from .dialect import (HAVE_DUCKDB, DuckDBDialect, Sql92Dialect, SqliteDialect,
-                      duckdb)
-
-_IDENT = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
-
-#: rows per executemany chunk (bounds peak Python-object materialisation)
-CHUNK_ROWS = 100_000
-
-#: queries slower than this many milliseconds are logged (rendered SQL head
-#: + span path) through the ``repro.db`` logger; unset/invalid → disabled
-SLOW_QUERY_ENV = "REPRO_SLOW_QUERY_MS"
-
-#: characters of rendered SQL attached to spans and slow-query log lines
-SQL_HEAD = 160
-
-log = logging.getLogger("repro.db")
-
-
-def _slow_threshold_s() -> float | None:
-    """Parse ``REPRO_SLOW_QUERY_MS`` (read per query so tests and running
-    processes can flip it); None disables the slow-query log."""
-    v = os.environ.get(SLOW_QUERY_ENV)
-    if not v:
-        return None
-    try:
-        return float(v) / 1e3
-    except ValueError:
-        return None
-
-
-def _check_ident(name: str) -> str:
-    if not _IDENT.match(name):
-        raise ValueError(f"bad SQL identifier: {name!r}")
-    return name
-
-
-#: process-wide table-generation registry: (db_key, table) → generation,
-#: bumped by every structured mutation through ANY adapter of the same
-#: logical database.  Pooled connections on one file see each other's
-#: writes, so per-adapter caches (``matrix_cache`` / ``matrix_digests`` /
-#: ``matrix_meta``) are trustworthy only while the generation they were
-#: recorded at (``Adapter.matrix_gen``) still matches — the fix for the
-#: two-connection stale-delta bug (``update_matrix_delta`` patching cells
-#: on top of a sibling's rewrite).
-_GEN_LOCK = threading.Lock()
-_TABLE_GEN: dict[tuple[str, str], int] = {}
-#: unique per-adapter token for non-shared registry keys (``:memory:``
-#: databases, temp-table namespaces).  A plain ``id(self)`` is NOT unique
-#: over time — CPython reuses addresses, so a fresh ``:memory:`` adapter
-#: could inherit a dead sibling's generations/digests and "adopt" tables
-#: it never wrote
-_CONN_SEQ = itertools.count()
-#: (db_key, table) → content digest as last written by ANY adapter.  A
-#: pooled worker about to ingest a leaf whose digest already matches can
-#: ADOPT the resident table instead of rewriting it — without this, two
-#: workers alternating on one shared weight relation would invalidate each
-#: other forever (write ping-pong).  Popped on every generation bump.
-_TABLE_DIGEST: dict[tuple[str, str], bytes] = {}
-
-
-class Adapter:
-    """Base adapter: a prepared connection + its dialect."""
-
-    dialect: Sql92Dialect
-    placeholder = "?"
-    #: whether ``insert_matrix_json`` (engine-side json_each expansion) is
-    #: available — probed per connection where the backend supports it
-    supports_json_ingest = False
-    #: whether the engine-side JSON path should be the *default* matrix
-    #: ingestion (``relation_io.write_matrix`` consults this) — only where
-    #: the runtime engine expands JSON in linear time
-    prefers_json_ingest = False
-
-    def __init__(self, conn):
-        self.conn = conn
-        #: table → content digest of the matrix it stores, maintained by
-        #: SQLEngine's leaf ingestion.  Lives on the adapter (not the
-        #: engine) so every adapter-level mutation of a table — replace
-        #: via create_table or append via bulk_insert/insert_columns, e.g.
-        #: db.train writing `img` directly — invalidates the entry, and
-        #: engines sharing one connection share the skip.  (Raw
-        #: ``execute`` writes are untracked: mutate matrix tables through
-        #: the structured methods.)
-        self.matrix_digests: dict[str, bytes] = {}
-        #: table → (representation, shape) of the matrix it stores — what
-        #: the bound-parameter delta path (``relation_io.update_matrix_*``)
-        #: checks before updating a resident relation in place
-        self.matrix_meta: dict[str, tuple] = {}
-        #: table → retained client-side copy of SMALL relational matrices
-        #: (``relation_io.DELTA_MAX_CELLS`` gate) — the diff base that turns
-        #: a leaf refresh into a prepared UPDATE of only the changed cells
-        self.matrix_cache: dict[str, np.ndarray] = {}
-        #: table → generation (``table_gen``) at which the caches above
-        #: were recorded; ``cache_fresh`` compares it against the shared
-        #: registry before any of them is trusted
-        self.matrix_gen: dict[str, int] = {}
-        #: tracer override for this connection's spans (None → the
-        #: module-level active tracer, a no-op unless installed)
-        self.tracer = None
-        #: serializes ALL raw-connection access AND counter updates —
-        #: sqlite connections opened ``check_same_thread=False`` and duckdb
-        #: cursors are handed across pool-worker threads; re-entrant so
-        #: span-wrapped fast paths may nest ``execute`` calls
-        self.lock = threading.RLock()
-        #: identity of the logical database for the shared generation
-        #: registry; file-backed adapters override with a path key so
-        #: sibling connections on one file share generations.  The token
-        #: is a process-lifetime-unique sequence number, never id()
-        self._conn_token = next(_CONN_SEQ)
-        self._db_key = f"conn:{self._conn_token}"
-        #: tables created ``temp=True`` — per-connection namespace, keyed
-        #: per-adapter in the registry so temp churn never invalidates
-        #: sibling connections
-        self._temp_tables: set[str] = set()
-        #: always-on cheap counters, merged into ``SQLEngine.stats``;
-        #: mutate through ``add_counters`` (or under ``self.lock``) — plain
-        #: ``+=`` from pool workers drops increments
-        self.counters: dict[str, int] = {
-            "queries": 0, "statements": 0, "rows_returned": 0,
-            "ingest_bytes": 0, "ingest_cells": 0, "slow_queries": 0,
-        }
-        self.dialect.prepare(conn)
-
-    # -- cross-connection cache coherence -----------------------------------
-    def _gen_key(self, name: str) -> tuple[str, str]:
-        """Registry key for a table: temp tables are invisible to sibling
-        connections, so they key per-adapter; everything else keys per
-        logical database."""
-        if name in self._temp_tables:
-            return (f"tmp:{self._conn_token}", name)
-        return (self._db_key, name)
-
-    def table_gen(self, name: str) -> int:
-        with _GEN_LOCK:
-            return _TABLE_GEN.get(self._gen_key(name), 0)
-
-    def bump_gen(self, name: str) -> None:
-        """Advance the table's shared generation (and drop its shared
-        digest): every sibling adapter's caches for it become stale."""
-        with _GEN_LOCK:
-            k = self._gen_key(name)
-            _TABLE_GEN[k] = _TABLE_GEN.get(k, 0) + 1
-            _TABLE_DIGEST.pop(k, None)
-
-    def cache_fresh(self, name: str) -> bool:
-        """Were this adapter's cached digest/meta/diff-copy for ``name``
-        recorded at the table's CURRENT generation?  False the moment any
-        sibling adapter on the same database mutates the relation."""
-        gen = self.matrix_gen.get(name)
-        return gen is not None and gen == self.table_gen(name)
-
-    def shared_digest(self, name: str) -> bytes | None:
-        with _GEN_LOCK:
-            return _TABLE_DIGEST.get(self._gen_key(name))
-
-    def record_digest(self, name: str, digest: bytes) -> None:
-        with _GEN_LOCK:
-            _TABLE_DIGEST[self._gen_key(name)] = digest
-
-    def add_counters(self, **deltas: int) -> None:
-        """Locked read-modify-write of the always-on counters — exact
-        totals even when pool workers ingest concurrently."""
-        with self.lock:
-            for k, v in deltas.items():
-                self.counters[k] = self.counters.get(k, 0) + v
-
-    # -- statement execution ------------------------------------------------
-    #
-    # EVERY statement the backend runs goes through ``execute`` /
-    # ``executemany`` (or the span-wrapped fast paths below), so span
-    # coverage and the query counters cannot be bypassed by new call sites
-    # — ``tests/test_obs_coverage.py`` statically enforces both halves.
-
-    def _finish_stmt(self, sql: str, dt: float, tracer) -> None:
-        """Shared statement epilogue: slow-query log (``REPRO_SLOW_QUERY_MS``)
-        with the rendered SQL head and the innermost span path."""
-        thr = _slow_threshold_s()
-        if thr is not None and dt >= thr:
-            self.counters["slow_queries"] += 1
-            head = " ".join(sql[:SQL_HEAD].split())
-            log.warning("slow query %.1f ms (>= %s ms) span=%s sql=%s",
-                        dt * 1e3, os.environ.get(SLOW_QUERY_ENV),
-                        tracer.current_path() or "<untraced>", head)
-
-    def execute(self, sql: str, params: Sequence = ()) -> list[tuple]:
-        """Run one statement, return all result rows (possibly empty).
-        Serialized on ``self.lock`` — one connection, many threads."""
-        tr = tracer_of(self)
-        with tr.span("db.execute") as sp, self.lock:
-            t0 = time.perf_counter()
-            cur = self.conn.execute(sql, tuple(params))
-            try:
-                rows = cur.fetchall()
-            except Exception:  # statement without a result set
-                rows = []
-            dt = time.perf_counter() - t0
-            self.counters["queries"] += 1
-            self.counters["rows_returned"] += len(rows)
-            if tr.enabled:
-                sp.set(sql=" ".join(sql[:SQL_HEAD].split()), rows=len(rows))
-                tr.observe("db.execute_ms", dt * 1e3)
-            self._finish_stmt(sql, dt, tr)
-        return rows
-
-    def executemany(self, sql: str, rows: Iterable[Sequence]) -> None:
-        tr = tracer_of(self)
-        with tr.span("db.executemany") as sp, self.lock:
-            t0 = time.perf_counter()
-            self.conn.executemany(sql, rows)
-            dt = time.perf_counter() - t0
-            self.counters["statements"] += 1
-            if tr.enabled:
-                sp.set(sql=" ".join(sql[:SQL_HEAD].split()))
-            self._finish_stmt(sql, dt, tr)
-
-    # -- introspection ------------------------------------------------------
-    def explain_sql(self, sql: str) -> str:
-        """The engine's plan for ``sql`` as text ('' where unsupported) —
-        captured once per cached plan by ``SQLEngine`` and stored alongside
-        the plan-cache entry."""
-        return ""
-
-    def db_bytes(self) -> int | None:
-        """Stored size of the database in bytes (None where unknowable) —
-        the ``db_bytes`` delta attribute of evaluation spans."""
-        return None
-
-    # -- schema / data ------------------------------------------------------
-    def forget(self, name: str) -> None:
-        """Drop THIS adapter's caches for a table without advancing the
-        shared generation — used when this adapter discovers its caches
-        are stale: the resident content is a sibling's valid write, and
-        bumping here would ping-pong invalidations between workers."""
-        self.matrix_digests.pop(name, None)
-        self.matrix_meta.pop(name, None)
-        self.matrix_cache.pop(name, None)
-        self.matrix_gen.pop(name, None)
-
-    def _invalidate(self, name: str) -> None:
-        """Forget everything cached about a matrix table — content digest,
-        shape metadata and the client-side diff copy — so any structured
-        mutation of the relation disables the unchanged-leaf skip AND the
-        bound-parameter delta path until the next full registration.  Also
-        advances the table's shared generation: sibling pooled adapters'
-        caches go stale with ours."""
-        self.forget(name)
-        self.bump_gen(name)
-
-    def create_table(self, name: str, columns: Sequence[tuple[str, str]],
-                     replace: bool = True, temp: bool = False) -> None:
-        """``columns`` is [(col_name, sql_type), ...].  ``temp=True``
-        creates a per-connection temp table (batched request leaves):
-        invisible to sibling connections, so its generation is keyed
-        per-adapter and never invalidates their caches."""
-        _check_ident(name)
-        if replace and not temp and name in self._temp_tables:
-            # a temp table shadows the main-schema name on this
-            # connection: DROP resolves to the shadow, so one drop below
-            # would leave the resident main table colliding with CREATE
-            self.execute(f"drop table if exists {name}")
-        if temp:
-            self._temp_tables.add(name)
-        else:
-            self._temp_tables.discard(name)
-        self._invalidate(name)
-        cols = ", ".join(f"{_check_ident(c)} {t}" for c, t in columns)
-        kw = "temp table" if temp else "table"
-        if replace:
-            self.execute(f"drop table if exists {name}")
-        self.execute(f"create {kw} {name} ({cols})")
-
-    def bulk_insert(self, name: str, rows: Iterable[Sequence]) -> None:
-        self._invalidate(name)
-        rows = list(rows)
-        if not rows:
-            return
-        ph = ", ".join([self.placeholder] * len(rows[0]))
-        self.executemany(f"insert into {_check_ident(name)} values ({ph})",
-                         rows)
-
-    def _prepare_columns(self, name: str, cols: Sequence,
-                         dtype=None) -> tuple[list[np.ndarray], int]:
-        """Shared ``insert_columns`` preamble: identifier check, digest
-        invalidation, array conversion, equal-length validation.  Returns
-        ``(columns, n_rows)``; ``n_rows == 0`` means nothing to insert."""
-        _check_ident(name)
-        self._invalidate(name)
-        cols = [np.asarray(c) if dtype is None else np.asarray(c, dtype)
-                for c in cols]
-        n = cols[0].shape[0] if cols else 0
-        if n and any(c.shape != (n,) for c in cols):
-            raise ValueError("insert_columns needs equal-length 1-D columns")
-        return cols, n
-
-    def insert_columns(self, name: str,
-                       cols: Sequence[np.ndarray]) -> None:
-        """Vectorized bulk ingestion: one ndarray per column, equal length.
-
-        Generic implementation: chunked ``executemany`` over ``zip`` of
-        ``tolist()`` slices — conversion to Python scalars happens in C,
-        never per-cell in Python.  Backends override with faster native
-        paths."""
-        cols, n = self._prepare_columns(name, cols)
-        if not n:
-            return
-        ph = ", ".join([self.placeholder] * len(cols))
-        sql = f"insert into {name} values ({ph})"
-        for s in range(0, n, CHUNK_ROWS):
-            e = min(n, s + CHUNK_ROWS)
-            self.executemany(sql, zip(*(c[s:e].tolist() for c in cols)))
-
-    def update_cells(self, name: str, flat_index: np.ndarray,
-                     values: np.ndarray, shape: Sequence[int]) -> None:
-        """Bound-parameter in-place update of individual matrix cells,
-        addressed by 0-based canonical row-major flat index — the prepared
-        statement behind the small-leaf delta ingestion path.  Generic
-        spelling keys on the (i, j) columns; sqlite overrides with the
-        rowid fast path."""
-        _check_ident(name)
-        self.matrix_digests.pop(name, None)
-        self.bump_gen(name)
-        cols = int(shape[1])
-        i = (flat_index // cols + 1).tolist()
-        j = (flat_index % cols + 1).tolist()
-        self.executemany(
-            f"update {name} set v = {self.placeholder} where"
-            f" i = {self.placeholder} and j = {self.placeholder}",
-            zip(values.tolist(), i, j))
-
-    # -- lifecycle ----------------------------------------------------------
-    def commit(self) -> None:
-        with self.lock:
-            self.conn.commit()
-
-    def close(self) -> None:
-        with self.lock:
-            try:  # flush pending inserts — sqlite3 rolls back open txns
-                self.conn.commit()
-            except Exception:  # pragma: no cover - autocommit (duckdb)
-                pass
-            self.conn.close()
-
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *exc):
-        self.close()
-
-
-class SQLiteAdapter(Adapter):
-    dialect = SqliteDialect()
-
-    #: rows per multi-row VALUES statement; sqlite's bound-parameter limit
-    #: is 999 on older builds — 300 rows × 3 cols stays under it
-    ROWS_PER_STMT = 300
-
-    #: first sqlite release whose JSON table-functions extract values in
-    #: linear time (the 3.38 JSON rewrite); before it ``json_each`` is
-    #: O(array length) per row and the engine-side parse loses to VALUES
-    #: (measured on this container's 3.34 — ``bench_mnist_db.py``)
-    JSON_LINEAR_VERSION = (3, 38)
-
-    #: milliseconds a statement waits on a sibling connection's write lock
-    #: before ``database is locked`` — generous: pool writers serialize
-    BUSY_TIMEOUT_MS = 30_000
-
-    def __init__(self, path: str = ":memory:"):
-        # check_same_thread=False: the adapter serializes every raw-
-        # connection access on ``self.lock``, so handing the connection
-        # across pool-worker threads is safe — sqlite's own affinity check
-        # would raise ProgrammingError on the first cross-thread call
-        super().__init__(sqlite3.connect(
-            path, timeout=self.BUSY_TIMEOUT_MS / 1e3,
-            check_same_thread=False))
-        self.path = path
-        if path != ":memory:":
-            # sibling connections on one file share table generations
-            self._db_key = "sqlite:" + os.path.abspath(path)
-        #: runtime engine version — instance-level so tests can pin it
-        self.sqlite_version = sqlite3.sqlite_version_info
-        try:  # table-valued JSON ingestion needs the (default) JSON1 ext.
-            # obs: exempt — capability probe at connect time, not a query
-            self.conn.execute("select count(*) from json_each('[0]')")
-            self.supports_json_ingest = True
-        except sqlite3.Error:  # pragma: no cover - JSON1-less builds
-            self.supports_json_ingest = False
-        try:
-            # obs: exempt — connection-mode pragmas at open, not queries
-            self.conn.execute(f"pragma busy_timeout = {self.BUSY_TIMEOUT_MS}")
-            if path != ":memory:":
-                # WAL: many concurrent readers + one writer across the
-                # pool's connections (a rollback-journal DB serializes
-                # readers behind any writer)
-                self.conn.execute("pragma journal_mode = wal")
-        except sqlite3.Error:  # pragma: no cover - locked-down builds
-            pass
-
-    @property
-    def prefers_json_ingest(self) -> bool:
-        """Auto-select the engine-side ``json_each`` ingestion on builds
-        where it is linear (≥ :data:`JSON_LINEAR_VERSION`); older engines
-        keep the multi-row VALUES batching."""
-        return (self.supports_json_ingest
-                and self.sqlite_version >= self.JSON_LINEAR_VERSION)
-
-    def explain_sql(self, sql: str) -> str:
-        """``EXPLAIN QUERY PLAN`` rows as ``id parent: detail`` lines."""
-        try:
-            rows = self.execute("explain query plan " + sql)
-        except Exception:
-            return ""
-        return "\n".join(f"{r[0]} {r[1]}: {r[-1]}" for r in rows)
-
-    def db_bytes(self) -> int | None:
-        try:
-            # obs: exempt — size probe read by the tracer itself; spanning
-            # it would pollute every evaluation trace with pragma queries
-            with self.lock:
-                page_count, = (self.conn.execute("pragma page_count")
-                               .fetchone())
-                page_size, = (self.conn.execute("pragma page_size")
-                              .fetchone())
-            return int(page_count) * int(page_size)
-        except Exception:  # pragma: no cover - pragma-less builds
-            return None
-
-    #: cells per bound JSON array.  sqlite ≤3.37 extracts json_each values
-    #: in O(array length) per row — one giant array is quadratic; bounded
-    #: chunks keep the parse cost linear (and the win grows on ≥3.38
-    #: builds, whose JSON table-functions are linear outright).
-    JSON_CHUNK_CELLS = 4096
-
-    def insert_matrix_json(self, name: str, x: np.ndarray) -> None:
-        """JSON-array ingestion (the ROADMAP's table-valued lever): bind
-        row-major JSON array chunks and let the engine expand them with the
-        ``json_each`` table-valued function — index arithmetic on ``key``
-        recovers the 1-based (i, j) pivot *inside* sqlite, eliminating the
-        per-row Python binding of the VALUES path.  Values round-trip
-        through sqlite's text→real parse, which may differ by ~1 ulp from
-        the bound double (``bench_mnist_db.py`` reports the two paths side
-        by side; on this container's 3.34 the engine-side parse roughly
-        cancels the client-side saving — the lever pays off on newer
-        JSON-optimised builds)."""
-        import json
-
-        _check_ident(name)
-        self._invalidate(name)
-        a = np.asarray(x, dtype=np.float64)
-        if a.ndim != 2:
-            raise ValueError(f"expected a matrix, got shape {a.shape}")
-        if not np.isfinite(a).all():
-            # json.dumps would emit NaN/Infinity tokens, which sqlite's
-            # JSON parser rejects mid-chunk (partial table); refuse up
-            # front — the VALUES path (write_matrix) binds them fine
-            raise ValueError("non-finite values cannot ride the JSON "
-                             "ingestion path; use write_matrix")
-        cols = a.shape[1]
-        flat = a.reshape(-1)
-        chunk = max(cols, (self.JSON_CHUNK_CELLS // cols) * cols)
-        sql = (f"insert into {name} "
-               f"select (key + ?) / {cols} + 1, key % {cols} + 1, value "
-               f"from json_each(?)")
-        tr = tracer_of(self)
-        with tr.span("db.ingest_json", table=name, cells=int(a.size)), \
-                self.lock:
-            cur = self.conn.cursor()
-            for s in range(0, flat.size, chunk):
-                cur.execute(sql, (s, json.dumps(flat[s:s + chunk].tolist())))
-                self.counters["statements"] += 1
-
-    def insert_columns(self, name: str,
-                       cols: Sequence[np.ndarray]) -> None:
-        """Multi-row VALUES batching: one statement binds ROWS_PER_STMT
-        rows, executemany streams the batches.  Parameters are interleaved
-        into one flat float list by strided ndarray assignment (ints bind
-        fine through float64 — sqlite is dynamically typed and the matrix
-        schema only ever compares/joins on equality of exact small ints)."""
-        cols, n = self._prepare_columns(name, cols, dtype=np.float64)
-        if not n:
-            return
-        k = len(cols)
-        flat = np.empty(n * k)
-        for ci, c in enumerate(cols):
-            flat[ci::k] = c
-        flat = flat.tolist()
-        row_ph = "(" + ", ".join(["?"] * k) + ")"
-        # never exceed 999 bound parameters per statement, whatever the
-        # column count (wider tables than {i,j,v} pass through here too)
-        batch = max(1, min(self.ROWS_PER_STMT, 999 // k))
-        full, rem = divmod(n, batch)
-        tr = tracer_of(self)
-        with tr.span("db.ingest_values", table=name, rows=n), self.lock:
-            cur = self.conn.cursor()
-            if full:
-                stride = k * batch
-                sql = (f"insert into {name} values "
-                       + ", ".join([row_ph] * batch))
-                cur.executemany(sql, (flat[s:s + stride]
-                                      for s in range(0, full * stride,
-                                                     stride)))
-                self.counters["statements"] += 1
-            if rem:
-                sql = (f"insert into {name} values "
-                       + ", ".join([row_ph] * rem))
-                cur.execute(sql, flat[full * batch * k:])
-                self.counters["statements"] += 1
-
-    def update_cells(self, name: str, flat_index: np.ndarray,
-                     values: np.ndarray, shape: Sequence[int]) -> None:
-        """The rowid fast path: matrix tables are populated in canonical
-        row-major order (``relation_io.matrix_to_columns``) and the delta
-        path never deletes individual rows, so ``rowid == flat_index + 1``
-        — one prepared two-parameter UPDATE per changed cell, no (i, j)
-        predicate evaluation."""
-        _check_ident(name)
-        self.matrix_digests.pop(name, None)
-        self.bump_gen(name)
-        self.executemany(f"update {name} set v = ? where rowid = ?",
-                         zip(values.tolist(), (flat_index + 1).tolist()))
-
-
-class DuckDBAdapter(Adapter):
-    placeholder = "?"
-
-    def __init__(self, path: str = ":memory:"):
-        if not HAVE_DUCKDB:  # pragma: no cover - depends on environment
-            raise ImportError("duckdb is not installed; "
-                              "use backend='sqlite' or pip install repro[db]")
-        self.dialect = DuckDBDialect()
-        super().__init__(duckdb.connect(path))
-        if path != ":memory:":  # pragma: no cover - needs duckdb
-            self._db_key = "duckdb:" + os.path.abspath(path)
-
-    def cursor_adapter(self) -> "DuckDBAdapter":  # pragma: no cover - duckdb
-        """A pool worker over this connection: ``conn.cursor()`` is a full
-        DuckDBPyConnection sharing the root's catalog, with its own temp
-        namespace and transaction state — duckdb's one-writer model with
-        per-worker cursors.  The worker shares ``_db_key`` (same logical
-        database) but carries its own lock and caches.
-        """
-        # obs: exempt — pool-worker construction, not a query; every
-        # statement the worker runs goes through the traced base methods
-        other = object.__new__(DuckDBAdapter)
-        other.dialect = DuckDBDialect()
-        Adapter.__init__(other, self.conn.cursor())
-        other._db_key = self._db_key
-        return other
-
-    def executemany(self, sql, rows):  # pragma: no cover - needs duckdb
-        # tuple-normalise for duckdb's binder, then ride the traced base
-        Adapter.executemany(self, sql, [tuple(r) for r in rows])
-
-    def explain_sql(self, sql: str) -> str:  # pragma: no cover - needs duckdb
-        """duckdb spells it plain ``EXPLAIN`` (physical plan as text)."""
-        try:
-            rows = self.execute("explain " + sql)
-        except Exception:
-            return ""
-        return "\n".join(str(r[-1]) for r in rows)
-
-    def insert_columns(self, name, cols):  # pragma: no cover - needs duckdb
-        """Register the column arrays as a relation (Arrow when available,
-        else a pandas DataFrame built zero-copy from the ndarrays) and run
-        ONE ``INSERT INTO … SELECT`` — duckdb's native bulk path; no
-        per-row Python at all."""
-        cols, n = self._prepare_columns(name, cols)
-        if not n:
-            return
-        names = [f"c{k}" for k in range(len(cols))]
-        view = f"_ingest_{name}"
-        frame = None
-        try:
-            import pyarrow as pa
-            frame = pa.table({nm: pa.array(c) for nm, c in zip(names, cols)})
-        except ImportError:
-            try:
-                import pandas as pd
-                frame = pd.DataFrame(dict(zip(names, cols)))
-            except ImportError:
-                pass
-        if frame is None:  # no columnar frontend — generic chunked path
-            Adapter.insert_columns(self, name, cols)
-            return
-        tr = tracer_of(self)
-        with tr.span("db.ingest_register", table=name, rows=n):
-            self.conn.register(view, frame)
-            try:
-                self.execute(f"insert into {name} select * from {view}")
-            finally:
-                self.conn.unregister(view)
-
-
-def connect(backend: str = "sqlite", path: str = ":memory:") -> Adapter:
-    """Open the requested backend; ``'auto'`` prefers duckdb when present."""
-    if backend == "auto":
-        backend = "duckdb" if HAVE_DUCKDB else "sqlite"
-    if backend == "sqlite":
-        return SQLiteAdapter(path)
-    if backend == "duckdb":
-        return DuckDBAdapter(path)
-    raise ValueError(f"unknown backend {backend!r}; "
-                     "expected 'sqlite', 'duckdb' or 'auto'")
-
-
-class ConnectionPool:
-    """A fixed set of worker adapters over ONE logical database — the
-    connection tier under :class:`repro.serving.db_serve.SQLBatchServer`.
-
-    * **sqlite file** — one WAL-mode connection per worker: WAL gives many
-      concurrent readers plus one writer, ``busy_timeout`` absorbs writer
-      collisions, and the shared generation registry keeps the per-
-      connection matrix caches coherent (same ``_db_key``).
-    * **sqlite** ``:memory:`` — N *independent* databases (stdlib sqlite3
-      shares an in-memory DB only through the deprecated ``cache=shared``
-      URI); shared leaves must be ingested into every worker — the batch
-      server's ``start()`` does.
-    * **duckdb** — ONE root connection, ``.cursor()`` per extra worker:
-      each cursor is a full connection over the root's catalog with its
-      own temp-table namespace.
-    """
-
-    def __init__(self, backend: str = "sqlite", path: str = ":memory:",
-                 size: int = 4):
-        if size < 1:
-            raise ValueError(f"pool size must be >= 1, got {size}")
-        self.backend = backend
-        self.path = path
-        root = connect(backend, path)
-        workers = [root]
-        for _ in range(size - 1):
-            if isinstance(root, DuckDBAdapter):  # pragma: no cover - duckdb
-                workers.append(root.cursor_adapter())
-            else:
-                workers.append(connect(backend, path))
-        self.adapters: list[Adapter] = workers
-
-    def __len__(self) -> int:
-        return len(self.adapters)
-
-    def __iter__(self):
-        return iter(self.adapters)
-
-    def __getitem__(self, i: int) -> Adapter:
-        return self.adapters[i]
-
-    def close(self) -> None:
-        # workers first, root (duckdb cursor parent) last
-        for a in self.adapters[:0:-1]:
-            try:
-                a.close()
-            except Exception:  # pragma: no cover - already-closed cursors
-                pass
-        self.adapters[0].close()
+from .adapters import (CHUNK_ROWS, SLOW_QUERY_ENV, SQL_HEAD, Adapter,
+                       ConnectionPool, DuckDBAdapter, HAVE_PSYCOPG2,
+                       PG_DSN_ENV, PostgresAdapter, SQLiteAdapter,
+                       _check_ident, connect, log)
+from .adapters.base import (_CONN_SEQ, _GEN_LOCK, _IDENT, _TABLE_DIGEST,
+                            _TABLE_GEN, _slow_threshold_s)
+
+__all__ = [
+    "Adapter", "SQLiteAdapter", "DuckDBAdapter", "PostgresAdapter",
+    "HAVE_PSYCOPG2", "PG_DSN_ENV", "connect", "ConnectionPool",
+    "CHUNK_ROWS", "SLOW_QUERY_ENV", "SQL_HEAD", "log",
+]

@@ -255,6 +255,21 @@ def _udf_mrowcat(concat) -> str:
     return _matrix_to_wire(np.vstack([json_to_matrix(m) for _t, m in rows]))
 
 
+def _udf_msum(concat) -> str:
+    """Matrix sum over a ``'|'``-joined concatenation of array codecs
+    (``msum(group_concat(m, '|'))``) — the array-representation AllReduce
+    reducer of ``db/shard.py``: per-shard gradient rows are string-
+    aggregated per weight relation and summed in ONE scalar call.  ``'|'``
+    is collision-free: neither codec (base64 wire, JSON) emits it."""
+    if concat is None:  # empty group (never rendered, but NULL-safe)
+        return _matrix_to_wire(np.zeros((0, 0)))
+    parts = [json_to_matrix(tok) for tok in concat.split("|")]
+    out = parts[0].astype(np.float64, copy=True)
+    for p in parts[1:]:
+        out += p
+    return _matrix_to_wire(out)
+
+
 #: name → (nargs, python impl).  These are the matrix operations of the
 #: paper's §5 array extension; ``core.sqlgen.array_call_expr`` (and the
 #: ``training_query_array_calls`` recursion built on it) renders expression
@@ -262,6 +277,7 @@ def _udf_mrowcat(concat) -> str:
 ARRAY_UDFS: dict[str, tuple[int, object]] = {
     "mm": (2, _wrap2(lambda a, b: a @ b)),
     "madd": (2, _wrap2(lambda a, b: a + b)),
+    "msum": (1, _udf_msum),
     "msub": (2, _wrap2(lambda a, b: a - b)),
     "mhad": (2, _wrap2(lambda a, b: a * b)),
     "mscale": (2, lambda c, x: _matrix_to_wire(c * json_to_matrix(x))),
@@ -507,6 +523,11 @@ class Sql92Dialect:
     #: can the engine run Listing 7 verbatim (recursive table in a nested
     #: WITH inside the recursive select)?
     supports_listing7 = True
+    #: can the §5 array representation's UDF zoo run on this dialect's
+    #: engines?  True wherever Python scalar functions register (sqlite,
+    #: duckdb); False on server-side plpython-free backends (postgres),
+    #: which must stay on the pure-SQL relational paths
+    supports_array_udfs = True
 
 
 def _windowed_topk_mask(src: str, k: int) -> str:
@@ -567,6 +588,30 @@ class DuckDBDialect(Sql92Dialect):
         _register_duckdb_udfs(conn)
 
 
+class PostgresDialect(Sql92Dialect):
+    """Server-side postgres: the SQL-92 rendering runs nearly verbatim —
+    ``generate_series`` / ``exp`` / ``greatest`` are native, window
+    functions replace the correlated top-k count — and everything stays
+    pure SQL (the server is plpython-free, so no UDF registration at all;
+    ``supports_array_udfs = False`` keeps callers on the relational
+    representation).  Listing 7 is off: postgres rejects the recursive
+    self-reference inside a subquery of the recursive member ("recursive
+    reference … must not appear within a subquery"), so training uses the
+    stepped driver.  CTEs materialise natively (each evaluated once
+    however often referenced — postgres ≥ 12 inlines single-reference
+    CTEs and materialises shared ones)."""
+
+    name = "postgres"
+    supports_listing7 = False  # recursive ref inside a subquery is rejected
+    supports_array_udfs = False
+
+    def topk_mask_select(self, src: str, k: int) -> str:
+        return _windowed_topk_mask(src, k)
+
+    def topk_mask_select_b(self, src: str, k: int) -> str:
+        return _windowed_topk_mask_b(src, k)
+
+
 class ArrayDialect(Sql92Dialect):
     """The array-typed representation as a first-class dialect (paper §5,
     Listing 10): every matrix — leaf table, CTE, query result — is ONE row
@@ -599,7 +644,8 @@ class ArrayDialect(Sql92Dialect):
 
 
 _DIALECTS = {"sql92": Sql92Dialect, "sqlite": SqliteDialect,
-             "duckdb": DuckDBDialect, "array": ArrayDialect}
+             "duckdb": DuckDBDialect, "postgres": PostgresDialect,
+             "array": ArrayDialect}
 
 
 def get_dialect(name) -> Sql92Dialect:

@@ -165,7 +165,7 @@ def rows_to_reltensor(rows, shape: tuple[int, int]) -> RelTensor:
 # adapter-level matrix tables
 # ---------------------------------------------------------------------------
 
-def write_matrix(adapter: Adapter, name: str, x) -> None:
+def write_matrix(adapter: Adapter, name: str, x, temp: bool = False) -> None:
     """CREATE + bulk-ingest the relation for ``x`` (replacing any old one).
 
     Ingestion auto-selects per adapter: where the runtime engine expands
@@ -175,11 +175,15 @@ def write_matrix(adapter: Adapter, name: str, x) -> None:
     container's sqlite 3.34, whose pre-3.38 ``json_each`` is quadratic —
     the vectorized client pivot + column ingestion stays the default.
     Non-finite values always take the VALUES path (sqlite's JSON parser
-    rejects NaN/Infinity tokens)."""
+    rejects NaN/Infinity tokens).
+
+    ``temp=True`` scopes the relation to this connection (per-shard
+    leaves, ``SQLEngine(temp_leaves=True)``): sibling pooled connections
+    never see it and their caches are never invalidated by it."""
     a = np.asarray(x, dtype=np.float64)
     with tracer_of(adapter).span("io.write_matrix", table=name,
                                  cells=int(a.size)):
-        adapter.create_table(name, MATRIX_COLUMNS)
+        adapter.create_table(name, MATRIX_COLUMNS, temp=temp)
         used_json = (getattr(adapter, "prefers_json_ingest", False)
                      and a.ndim == 2 and np.isfinite(a).all())
         if used_json:
@@ -246,14 +250,16 @@ def read_matrix(adapter: Adapter, name: str,
     return rows_to_matrix(rows, shape)
 
 
-def write_matrix_array(adapter: Adapter, name: str, x) -> None:
+def write_matrix_array(adapter: Adapter, name: str, x,
+                       temp: bool = False) -> None:
     """CREATE + ingest ``x`` in the *array* representation: one row, one
     array-typed (JSON codec) column — the leaf layout the ``array`` dialect
-    renders against (``SQLEngine(dialect="array")``)."""
+    renders against (``SQLEngine(dialect="array")``).  ``temp=True`` as in
+    :func:`write_matrix`."""
     a = np.asarray(x, dtype=np.float64)
     with tracer_of(adapter).span("io.write_matrix_array", table=name,
                                  cells=int(a.size)):
-        adapter.create_table(name, ARRAY_COLUMNS)
+        adapter.create_table(name, ARRAY_COLUMNS, temp=temp)
         adapter.bulk_insert(name, [(matrix_to_json(a),)])
         _count_ingest(adapter, a)
     if a.ndim == 2:
@@ -327,6 +333,56 @@ def update_matrix_array(adapter: Adapter, name: str, x) -> bool:
     adapter.add_counters(delta_updates=1)
     _count_ingest(adapter, a)
     return True
+
+
+# ---------------------------------------------------------------------------
+# cross-connection gradient shipping (the AllReduce input of db/shard.py)
+# ---------------------------------------------------------------------------
+
+#: coordinator-side gradient relation: ``r`` the multi-root tag of the
+#: shard plan's result rows (1.. = the wrt weights, in order), ``s`` the
+#: shard index — the SQL AllReduce groups on (r, i, j) across ``s``
+SHARD_GRAD_COLUMNS = (("r", "integer"), ("s", "integer")) + MATRIX_COLUMNS
+
+#: array-representation twin: one codec row per (weight, shard)
+SHARD_GRAD_ARRAY_COLUMNS = (("r", "integer"), ("s", "integer")) + ARRAY_COLUMNS
+
+
+def create_shard_grads(adapter: Adapter, name: str, representation: str,
+                       temp: bool = True) -> None:
+    """The coordinator's gradient landing relation (temp by default — it
+    is per-coordinator scratch, rebuilt every step)."""
+    cols = (SHARD_GRAD_COLUMNS if representation == "relational"
+            else SHARD_GRAD_ARRAY_COLUMNS)
+    adapter.create_table(name, cols, temp=temp)
+
+
+def ship_grad_rows(adapter: Adapter, name: str, shard: int, rows,
+                   representation: str, grad_roots_from: int = 1) -> int:
+    """Import one shard's tagged multi-root result rows (the raw output of
+    ``SQLEngine.evaluate_rows``) into the coordinator's gradient relation,
+    stamped with the shard index — the export/import half of the SQL
+    AllReduce.  Rows tagged below ``grad_roots_from`` (the loss root) are
+    not gradients and are skipped.  Returns the number of rows shipped."""
+    kept = [row for row in rows if row[0] >= grad_roots_from]
+    n = len(kept)
+    with tracer_of(adapter).span("io.ship_grads", table=name, shard=shard,
+                                 rows=n):
+        if not n:
+            return 0
+        if representation == "relational":
+            arr = np.asarray(kept, dtype=np.float64)
+            adapter.insert_columns(name, (
+                arr[:, 0].astype(np.int64),
+                np.full(n, shard, dtype=np.int64),
+                arr[:, 1].astype(np.int64),
+                arr[:, 2].astype(np.int64),
+                arr[:, 3]))
+        else:
+            adapter.bulk_insert(name, [(int(r), shard, m)
+                                       for r, m in kept])
+        adapter.add_counters(shipped_rows=n)
+    return n
 
 
 def read_matrix_array(adapter: Adapter, name: str) -> np.ndarray:

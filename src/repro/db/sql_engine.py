@@ -83,7 +83,7 @@ class SQLEngine:
     def __init__(self, backend: str = "sqlite", path: str = ":memory:",
                  adapter: Adapter | None = None, plan_cache_=None,
                  dialect=None, tracer=None, fuse: bool | None = None,
-                 spool: bool | None = None):
+                 spool: bool | None = None, temp_leaves: bool = False):
         """``plan_cache_``: a :class:`repro.db.plan_cache.PlanCache`,
         ``None`` for the shared persistent default, or ``False`` to render
         every query from scratch.
@@ -104,7 +104,15 @@ class SQLEngine:
         ``spool``: materialise multi-referenced subplans as temp tables
         before the main statement — defaults to whether the dialect's
         engine flattens CTEs by substitution (sqlite < 3.35 re-executes
-        every reference); ``REPRO_SQL_SPOOL`` overrides."""
+        every reference); ``REPRO_SQL_SPOOL`` overrides.
+
+        ``temp_leaves``: ingest every leaf relation as a per-connection
+        TEMP table.  The shard tier (``db/shard.py``) runs one engine per
+        pooled connection with this on: each shard's weights and batch
+        partition live in its own temp namespace, so shards never shadow
+        a shared catalog, never contend for the main database's write
+        lock, and never invalidate each other's matrix caches (temp
+        generations key per-adapter)."""
         self.adapter = adapter if adapter is not None else connect(backend, path)
         if dialect is None:
             self.dialect = self.adapter.dialect
@@ -122,6 +130,7 @@ class SQLEngine:
                 == "substitution")
         else:
             self.spool = bool(spool)
+        self.temp_leaves = bool(temp_leaves)
         self.plans = plan_cache.resolve(plan_cache_)
         self.tracer = tracer
         if tracer is not None:
@@ -194,13 +203,15 @@ class SQLEngine:
                 if relation_io.update_matrix_array(self.adapter, v.name, a):
                     info["delta_updates"] += 1
                 else:
-                    relation_io.write_matrix_array(self.adapter, v.name, a)
+                    relation_io.write_matrix_array(self.adapter, v.name, a,
+                                                   temp=self.temp_leaves)
                 info["bytes_written"] += a.nbytes
             else:
                 written = relation_io.update_matrix_delta(
                     self.adapter, v.name, a)
                 if written is None:
-                    relation_io.write_matrix(self.adapter, v.name, a)
+                    relation_io.write_matrix(self.adapter, v.name, a,
+                                             temp=self.temp_leaves)
                     info["bytes_written"] += a.nbytes
                 else:
                     info["delta_updates"] += 1
@@ -354,6 +365,34 @@ class SQLEngine:
             self._record_eval_metrics(tr, time.perf_counter() - t_eval0,
                                       ingest)
             return outs
+
+    def evaluate_rows(self, roots: list[E.Expr], env: dict) -> list[tuple]:
+        """Like :meth:`evaluate`, but return the RAW tagged result rows —
+        relational ``(r, i, j, v)`` / array ``(r, m)`` — without the dense
+        decode.  The export half of cross-connection gradient shipping
+        (``db/shard.py``): the coordinator re-ingests the tuples verbatim
+        (``relation_io.ship_grad_rows``), so pivoting to dense here would
+        be round-trip waste.  The whole round trip holds the adapter lock
+        — one shard thread per connection serializes cleanly."""
+        tr = tracer_of(self, self.adapter)
+        with self.adapter.lock:
+            if not tr.enabled:
+                self._write_env(roots, env)
+                return self._run_plan(self._render(roots))
+            t_eval0 = time.perf_counter()
+            with tr.span("sql.evaluate_rows",
+                         **self._root_attrs(roots)) as root_sp:
+                with tr.span("sql.ingest") as ing_sp:
+                    ingest = self._write_env(roots, env)
+                    ing_sp.set(**ingest)
+                with tr.span("sql.render"):
+                    plan = self._render(roots)
+                rows = self._run_plan(plan)
+                root_sp.set(rows_returned=len(rows),
+                            spool_steps=len(plan.steps))
+                self._record_eval_metrics(tr, time.perf_counter() - t_eval0,
+                                          ingest)
+                return rows
 
     # -- batched (multi-tenant) evaluation ----------------------------------
     def _write_batch(self, batch_env: dict) -> int:
@@ -563,6 +602,34 @@ class SQLEngine:
         if tr is not None and tr.enabled:
             out["tracer"] = {"spans": len(tr.spans),
                              "counters": tr.counters, "gauges": tr.gauges}
+        return out
+
+    @staticmethod
+    def merged_stats(engines: "list[SQLEngine]") -> dict:
+        """Shard-aware stats: sum the integer counters of N per-shard
+        engines (plan-cache counters are shared, so they are taken from
+        the first engine rather than multiply counted).  What
+        ``train_in_db(shards=N)`` reports as its engine view."""
+        if not engines:
+            return {}
+        first = engines[0].stats
+        shared_cache = {e.plans for e in engines if e.plans is not None}
+        out = {"shards": len(engines),
+               "plan_cache": first.get("plan_cache", {}),
+               "cache_hits": first.get("cache_hits", 0),
+               "cache_misses": first.get("cache_misses", 0)}
+        adapter_total: dict = {}
+        for e in engines:
+            for k, v in e.adapter.counters.items():
+                adapter_total[k] = adapter_total.get(k, 0) + v
+        out["adapter"] = adapter_total
+        out["queries"] = adapter_total.get("queries", 0)
+        out["ingest_bytes"] = adapter_total.get("ingest_bytes", 0)
+        if len(shared_cache) > 1:  # distinct caches — sum them honestly
+            out["cache_hits"] = sum(e.plans.hits for e in engines
+                                    if e.plans is not None)
+            out["cache_misses"] = sum(e.plans.misses for e in engines
+                                      if e.plans is not None)
         return out
 
     # -- lifecycle ----------------------------------------------------------

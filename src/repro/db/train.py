@@ -206,7 +206,7 @@ def train_in_db(graph, weights, x, y_onehot, n_iters: int, *,
                 adapter: Adapter | None = None,
                 strategy: str = "recursive",
                 representation: str = "auto",
-                plan_cache_=None) -> DBTrainResult:
+                plan_cache_=None, shards: int = 1) -> DBTrainResult:
     """Train the Section-2.2 MLP inside the database.  See module docstring
     for the strategy × backend matrix.  ``plan_cache_``: a
     :class:`~repro.db.plan_cache.PlanCache`, ``None`` for the shared
@@ -217,16 +217,46 @@ def train_in_db(graph, weights, x, y_onehot, n_iters: int, *,
     of array-typed weight columns — what ``SQLEngine(dialect="array")``
     evaluates with), ``"relational"`` forces Listing 7 verbatim (set
     semantics required — duckdb; sqlite falls back to ``stepped``), and
-    ``"auto"`` (default) picks whichever the engine can execute."""
+    ``"auto"`` (default) picks whichever the engine can execute.
+
+    ``shards=N`` (N > 1) switches to data-parallel execution
+    (:func:`repro.db.shard.train_in_db_sharded`): the batch is partitioned
+    across N pooled connections, gradients are reduced by a SQL AllReduce
+    on a coordinator connection, and the result is a drop-in for the
+    unsharded run (same update — the sum-gradient of the unreduced square
+    loss — up to float summation order, ≤ 1e-4 at MNIST scale)."""
     if representation not in ("auto", "array", "relational"):
         raise ValueError(f"unknown representation {representation!r}")
+    if shards != 1:
+        if adapter is not None:
+            raise ValueError(
+                "shards > 1 needs its own connection pool — pass "
+                "backend/path instead of a single adapter")
+        if strategy != "recursive":
+            raise ValueError(
+                f"sharded training replaces the iteration strategy "
+                f"(per-step SQL AllReduce); got strategy={strategy!r}")
+        from .shard import train_in_db_sharded
+        return train_in_db_sharded(graph, weights, x, y_onehot, n_iters,
+                                   shards=shards, backend=backend,
+                                   path=path, representation=representation,
+                                   plan_cache_=plan_cache_)
     adapter, owned = _open(backend, path, adapter)
+    if (representation == "array"
+            and not getattr(adapter, "supports_python_udfs", True)):
+        if owned:
+            adapter.close()
+        raise ValueError(
+            f"the array representation needs Python UDFs, which "
+            f"{type(adapter).__name__} cannot register — use "
+            f"representation='relational' (or 'auto')")
 
     def dispatch() -> DBTrainResult:
         if strategy == "recursive":
             if representation == "array" or (
                     representation == "auto"
-                    and not adapter.dialect.supports_listing7):
+                    and not adapter.dialect.supports_listing7
+                    and getattr(adapter, "supports_python_udfs", True)):
                 return _train_recursive_arrays(
                     graph, weights, x, y_onehot, n_iters, adapter,
                     plan_cache_)

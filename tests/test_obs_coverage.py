@@ -2,16 +2,18 @@
 
 Instrumentation lives *inside* the adapter methods (``execute`` /
 ``executemany`` / the ingestion cursors), so any call site is span-wrapped
-by construction.  What could still rot is the adapter itself: a new method
-talking to the raw connection without a span, or engine code reaching past
-the adapter straight to ``conn``.  Two AST/grep checks pin both:
+by construction.  What could still rot is the adapter tier itself: a new
+method talking to the raw connection without a span, or engine code
+reaching past the adapter straight to ``conn``.  Two AST/grep checks pin
+both:
 
-1. every function in ``db/adapter.py`` that executes on the raw connection
-   (``conn.execute`` / ``conn.executemany`` / ``conn.cursor``) either opens
-   a span (``span(`` in its source) or carries an explicit
-   ``# obs: exempt — <reason>`` marker;
-2. across ``src/repro``, raw-connection execution appears only in
-   ``db/adapter.py`` and ``db/plan_cache.py`` (the cache's private sqlite
+1. every function in the ``db/adapters/`` package (and the ``db/adapter.py``
+   shim) that executes on the raw connection (``conn.execute`` /
+   ``conn.executemany`` / ``conn.cursor``) either opens a span (``span(``
+   in its source) or carries an explicit ``# obs: exempt — <reason>``
+   marker;
+2. across ``src/repro``, raw-connection execution appears only in the
+   adapter tier and ``db/plan_cache.py`` (the cache's private sqlite
    store — metadata, not traced workload queries).
 """
 import ast
@@ -23,11 +25,16 @@ SRC = pathlib.Path(__file__).parent.parent / "src" / "repro"
 EXEC_CALL = re.compile(r"conn\.(execute|executemany|cursor)\s*\(")
 EXEMPT = re.compile(r"#\s*obs:\s*exempt\s*(—|-)\s*\S")
 
+#: the adapter tier — the back-compat shim plus every backend module
+ADAPTER_FILES = sorted((SRC / "db" / "adapters").glob("*.py")) + [
+    SRC / "db" / "adapter.py"]
+
 #: the only modules allowed to touch a raw DB-API connection —
 #: obs/report.py is the offline capture viewer: it opens a *finished*
 #: trace database read-only, so there is no live engine whose spans,
 #: counters or slow-query log it could bypass
-ALLOWED_RAW = {"db/adapter.py", "db/plan_cache.py", "obs/report.py"}
+ALLOWED_RAW = ({"db/adapter.py", "db/plan_cache.py", "obs/report.py"}
+               | {f.relative_to(SRC).as_posix() for f in ADAPTER_FILES})
 
 
 def _functions_with_source(path: pathlib.Path):
@@ -40,12 +47,14 @@ def _functions_with_source(path: pathlib.Path):
 
 def test_adapter_raw_execution_is_span_wrapped_or_exempt():
     offenders = []
-    for name, src in _functions_with_source(SRC / "db" / "adapter.py"):
-        if not EXEC_CALL.search(src):
-            continue
-        if "span(" in src or EXEMPT.search(src):
-            continue
-        offenders.append(name)
+    for path in ADAPTER_FILES:
+        rel = path.relative_to(SRC).as_posix()
+        for name, src in _functions_with_source(path):
+            if not EXEC_CALL.search(src):
+                continue
+            if "span(" in src or EXEMPT.search(src):
+                continue
+            offenders.append(f"{rel}:{name}")
     assert not offenders, (
         f"adapter functions executing on the raw connection without a span "
         f"or an '# obs: exempt — <reason>' marker: {offenders}")
@@ -53,21 +62,24 @@ def test_adapter_raw_execution_is_span_wrapped_or_exempt():
 
 def test_adapter_core_paths_are_instrumented_not_exempted():
     """The hot paths must be traced for real — an exemption marker on them
-    would silently void the whole coverage guarantee.  Overrides that
+    would silently void the whole coverage guarantee.  The raw-driver
+    seams (``_execute_raw`` / ``_executemany_raw``) run only under the
+    wrappers' spans, so the wrappers themselves must span; overrides that
     delegate to the traced base method (duckdb's ``executemany``) don't
     touch the connection and are checked for the delegation instead."""
-    funcs = list(_functions_with_source(SRC / "db" / "adapter.py"))
-    for required in ("execute", "executemany"):
-        for name, src in funcs:
-            if name != required:
-                continue
-            if EXEC_CALL.search(src):
-                assert "span(" in src, f"{required} lost its span"
-                assert not EXEMPT.search(src), f"{required} must not be exempt"
-            else:
-                assert f"Adapter.{required}(" in src or "span(" in src, (
-                    f"{required} override neither spans nor delegates "
-                    f"to the traced base")
+    funcs = [f for path in ADAPTER_FILES
+             for f in _functions_with_source(path)]
+    wrappers = [(n, s) for n, s in funcs
+                if n in ("execute", "executemany")]
+    assert wrappers, "the execute/executemany wrappers vanished"
+    for name, src in wrappers:
+        if EXEC_CALL.search(src) or "_raw(" in src:
+            assert "span(" in src, f"{name} lost its span"
+            assert not EXEMPT.search(src), f"{name} must not be exempt"
+        else:
+            assert f"Adapter.{name}(" in src or "span(" in src, (
+                f"{name} override neither spans nor delegates "
+                f"to the traced base")
 
 
 def test_raw_connection_confined_to_adapter_and_plan_cache():
@@ -80,13 +92,14 @@ def test_raw_connection_confined_to_adapter_and_plan_cache():
             if EXEC_CALL.search(line):
                 offenders.append(f"{rel}:{i}: {line.strip()}")
     assert not offenders, (
-        "raw-connection execution outside db/adapter.py "
+        "raw-connection execution outside the db/adapters tier "
         "(bypasses spans, counters and the slow-query log):\n"
         + "\n".join(offenders))
 
 
 def test_every_exemption_has_a_reason():
-    text = (SRC / "db" / "adapter.py").read_text()
-    for line in text.splitlines():
-        if "obs: exempt" in line:
-            assert EXEMPT.search(line), f"exemption without a reason: {line!r}"
+    for path in ADAPTER_FILES:
+        for line in path.read_text().splitlines():
+            if "obs: exempt" in line:
+                assert EXEMPT.search(line), (
+                    f"exemption without a reason: {line!r}")

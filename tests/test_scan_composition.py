@@ -1,0 +1,90 @@
+"""Scans must COMPOSE on substitution-semantics engines (sqlite).
+
+sqlite flattens non-recursive CTE references by substitution, so a
+recursive member that references the scan-input CTE re-executes it at
+every step — and a scan whose input is *itself* a scan would splice one
+recursion into another's recursive member.  The fix: ``_render_refs``
+counts a ``Recurrence``'s input twice, so the spool pass materialises the
+scan input as an engine-side temp table before the main statement.  These
+tests pin both halves — the plan shape and the executed numbers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import expr as E
+from repro.core import sqlgen
+from repro.db.dialect import get_dialect
+from repro.db.sql_engine import SQLEngine
+
+
+def _scan(av, bv):
+    """Dense reference: s_t = a_t ∘ s_{t-1} + b_t, s_0 = 0."""
+    s = np.zeros(av.shape[1])
+    out = []
+    for t in range(av.shape[0]):
+        s = av[t] * s + bv[t]
+        out.append(s.copy())
+    return np.asarray(out)
+
+
+def _nested(T=6, C=4, seed=3):
+    rng = np.random.RandomState(seed)
+    a = E.var("a", (T, C))
+    b = E.var("b", (T, C))
+    c = E.var("c", (T, C))
+    inner = E.recurrence(a, b, name="inner")
+    # the inner scan in the COEFFICIENT slot — the composition that used
+    # to be substituted into the outer recursive member
+    outer = E.recurrence(inner, c, name="outer")
+    env = {"a": rng.randn(T, C) * 0.5, "b": rng.randn(T, C),
+           "c": rng.randn(T, C) * 0.5}
+    return outer, env, _scan(_scan(env["a"], env["b"]), env["c"])
+
+
+def test_scan_input_is_spooled_on_substitution_dialects():
+    outer, _, _ = _nested()
+    plan = sqlgen.render_plan([outer], dialect=get_dialect("sqlite"),
+                              spool=True, spool_threshold=2)
+    assert [t for t, _ in plan.steps] == ["_sp_inner"]
+    assert "_sp_inner" in plan.sql
+
+
+def test_nested_scan_executes_exactly_on_sqlite():
+    outer, env, ref = _nested()
+    with SQLEngine(plan_cache_=False) as eng:
+        assert eng.spool  # sqlite < 3.35: substitution semantics
+        got, = eng.evaluate([outer], env)
+    np.testing.assert_allclose(got, ref, atol=1e-12)
+
+
+def test_nested_scan_in_seed_slot_executes_exactly():
+    T, C = 5, 3
+    rng = np.random.RandomState(9)
+    a = E.var("a", (T, C))
+    b = E.var("b", (T, C))
+    c = E.var("c", (T, C))
+    inner = E.recurrence(a, b, name="inner2")
+    outer = E.recurrence(c, inner, name="outer2")  # inner seeds b_t
+    env = {"a": rng.randn(T, C) * 0.5, "b": rng.randn(T, C),
+           "c": rng.randn(T, C) * 0.5}
+    ref = _scan(env["c"], _scan(env["a"], env["b"]))
+    with SQLEngine(plan_cache_=False) as eng:
+        got, = eng.evaluate([outer], env)
+    np.testing.assert_allclose(got, ref, atol=1e-12)
+
+
+def test_scan_reused_downstream_still_exact():
+    """The doubled multiplicity must not break single-scan DAGs where the
+    scan output itself fans out (spooled as before)."""
+    T, C = 5, 3
+    rng = np.random.RandomState(4)
+    a = E.var("a", (T, C))
+    b = E.var("b", (T, C))
+    s = E.recurrence(a, b, name="fan")
+    root = E.add(s, E.hadamard(s, s))
+    env = {"a": rng.randn(T, C) * 0.5, "b": rng.randn(T, C)}
+    sv = _scan(env["a"], env["b"])
+    with SQLEngine(plan_cache_=False) as eng:
+        got, = eng.evaluate([root], env)
+    np.testing.assert_allclose(got, sv + sv * sv, atol=1e-12)

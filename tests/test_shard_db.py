@@ -1,0 +1,196 @@
+"""Data-parallel in-DB training: determinism, equivalence, plan reuse.
+
+The contract under test (``db/shard.py``): ``train_in_db(shards=N)`` is a
+drop-in for the unsharded run.  The gradient of the unreduced square loss
+is a SUM over examples, so the SQL AllReduce's sum across shard gradient
+relations reconstructs the full-batch update exactly — sharded vs
+unsharded differs only in float summation order (≤ 1e-4 at benchmark
+scale; at the scales here it is ≤ 1e-9), and a fixed partition
+(``launch.mesh.shard_slices``) makes the sharded run itself bitwise
+deterministic across repeats and shard counts.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import nn2sql
+from repro.db.shard import (WEIGHT_NAMES, allreduce_statements,
+                            train_in_db_sharded)
+from repro.db.train import train_in_db
+from repro.launch.mesh import AxisSpec, shard_slices
+
+RNG = np.random.RandomState(11)
+
+
+def _problem(n_rows=12, lr=0.05):
+    spec = nn2sql.MLPSpec(n_rows=n_rows, n_features=6, n_hidden=5,
+                          n_classes=3, lr=lr)
+    g = nn2sql.build_graph(spec)
+    w = {"w_xh": RNG.randn(6, 5) * 0.3, "w_ho": RNG.randn(5, 3) * 0.3}
+    x = RNG.randn(n_rows, 6)
+    y = np.eye(3)[RNG.randint(0, 3, n_rows)]
+    return g, w, x, y
+
+
+# ---------------------------------------------------------------------------
+# the partition
+# ---------------------------------------------------------------------------
+
+class TestShardSlices:
+    def test_balanced_contiguous_cover(self):
+        sl = shard_slices(10, 4)
+        assert [s.stop - s.start for s in sl] == [3, 3, 2, 2]
+        assert sl[0].start == 0 and sl[-1].stop == 10
+        for a, b in zip(sl, sl[1:]):
+            assert a.stop == b.start
+
+    def test_exact_division(self):
+        assert shard_slices(8, 4) == [slice(0, 2), slice(2, 4),
+                                      slice(4, 6), slice(6, 8)]
+
+    def test_rejects_bad_counts(self):
+        with pytest.raises(ValueError):
+            shard_slices(4, 0)
+        with pytest.raises(ValueError):
+            shard_slices(3, 4)
+
+    def test_axis_spec_validates(self):
+        assert AxisSpec("data", 4).size == 4
+        with pytest.raises(ValueError):
+            AxisSpec("data", 0)
+
+
+# ---------------------------------------------------------------------------
+# the AllReduce SQL
+# ---------------------------------------------------------------------------
+
+class TestAllReduceSQL:
+    def test_relational_groups_and_applies_sgd(self):
+        stmts, read_back = allreduce_statements("relational", 0.05)
+        reduce_stmt = stmts[1]
+        assert "group by r, i, j" in reduce_stmt
+        assert "sum(v)" in reduce_stmt
+        assert "0.05" in reduce_stmt
+        assert "select r, i, j, v from shard_w" == read_back
+
+    def test_array_reduces_with_msum(self):
+        stmts, read_back = allreduce_statements("array", 0.05)
+        reduce_stmt = stmts[1]
+        assert "msum(group_concat(m, '|'))" in reduce_stmt
+        assert "madd" in reduce_stmt and "mscale" in reduce_stmt
+        assert read_back == "select r, m from shard_w"
+
+
+# ---------------------------------------------------------------------------
+# determinism + equivalence
+# ---------------------------------------------------------------------------
+
+class TestShardedTraining:
+    def test_shards_1_equals_shards_4(self):
+        """The fixed partition order makes shard counts interchangeable to
+        float-summation noise (≤ 1e-9 at this scale)."""
+        g, w, x, y = _problem()
+        r1 = train_in_db_sharded(g, w, x, y, 3, shards=1,
+                                 plan_cache_=False)
+        r4 = train_in_db_sharded(g, w, x, y, 3, shards=4,
+                                 plan_cache_=False)
+        for k in WEIGHT_NAMES:
+            np.testing.assert_allclose(r4.weights[k], r1.weights[k],
+                                       atol=1e-9)
+
+    def test_repeat_runs_are_bitwise_identical(self):
+        g, w, x, y = _problem()
+        a = train_in_db_sharded(g, w, x, y, 2, shards=3, plan_cache_=False)
+        b = train_in_db_sharded(g, w, x, y, 2, shards=3, plan_cache_=False)
+        for k in WEIGHT_NAMES:
+            assert np.array_equal(a.weights[k], b.weights[k])
+
+    def test_sharded_matches_unsharded(self):
+        """The ISSUE acceptance bound: shards=4 ≡ the unsharded stepped
+        run ≤ 1e-4 (here ≤ 1e-9 — only summation order differs)."""
+        g, w, x, y = _problem()
+        ref = train_in_db(g, w, x, y, 3, strategy="stepped",
+                          plan_cache_=False)
+        got = train_in_db(g, w, x, y, 3, shards=4, plan_cache_=False)
+        assert got.strategy == "sharded"
+        assert got.n_iters == 3
+        assert len(got.history) == len(ref.history)
+        for k in WEIGHT_NAMES:
+            np.testing.assert_allclose(got.weights[k], ref.weights[k],
+                                       atol=1e-9)
+
+    def test_uneven_partition_matches_unsharded(self):
+        g, w, x, y = _problem(n_rows=11)
+        ref = train_in_db(g, w, x, y, 2, strategy="stepped",
+                          plan_cache_=False)
+        got = train_in_db_sharded(g, w, x, y, 2, shards=3,
+                                  plan_cache_=False)
+        for k in WEIGHT_NAMES:
+            np.testing.assert_allclose(got.weights[k], ref.weights[k],
+                                       atol=1e-9)
+
+    def test_array_representation_matches_relational(self):
+        g, w, x, y = _problem()
+        rel = train_in_db_sharded(g, w, x, y, 2, shards=2,
+                                  representation="relational",
+                                  plan_cache_=False)
+        arr = train_in_db_sharded(g, w, x, y, 2, shards=2,
+                                  representation="array",
+                                  plan_cache_=False)
+        for k in WEIGHT_NAMES:
+            np.testing.assert_allclose(arr.weights[k], rel.weights[k],
+                                       atol=1e-9)
+
+    def test_traffic_accounted(self):
+        g, w, x, y = _problem()
+        res = train_in_db_sharded(g, w, x, y, 2, shards=2,
+                                  plan_cache_=False)
+        # 2 iterations × 2 shards × (30 + 15) gradient cells, 5 values/row
+        assert res.cte_bytes == 2 * 2 * (6 * 5 + 5 * 3) * 5 * 8
+        assert "group by r, i, j" in res.sql
+
+    def test_guard_rails(self):
+        g, w, x, y = _problem()
+        with pytest.raises(ValueError):
+            train_in_db_sharded(g, w, x, y, 1, shards=0)
+        with pytest.raises(ValueError):
+            train_in_db(g, w, x, y, 1, shards=2, strategy="stepped")
+        from repro.db import connect
+        ad = connect("sqlite")
+        try:
+            with pytest.raises(ValueError):
+                train_in_db(g, w, x, y, 1, shards=2, adapter=ad)
+        finally:
+            ad.close()
+
+
+# ---------------------------------------------------------------------------
+# plan-cache behaviour: shard count NEVER enters the key
+# ---------------------------------------------------------------------------
+
+class TestShardPlanCache:
+    def test_equal_shards_share_one_plan(self, tmp_path):
+        """4 equal shards render ONE plan (3-row per-shard graph): one
+        miss, every other shard (and every later iteration) hits."""
+        from repro.db.plan_cache import PlanCache
+        cache = PlanCache(path=str(tmp_path / "plans.db"))
+        g, w, x, y = _problem(n_rows=12)
+        train_in_db_sharded(g, w, x, y, 2, shards=4, plan_cache_=cache)
+        assert cache.misses == 1
+        assert cache.hits >= 3
+
+    def test_shard_count_not_in_key(self, tmp_path):
+        """shards=2 on 12 rows and shards=4 on 24 rows both run 6-row
+        shard plans — the second training run must be all cache hits."""
+        from repro.db.plan_cache import PlanCache
+        cache = PlanCache(path=str(tmp_path / "plans.db"))
+        g, w, x, y = _problem(n_rows=12)
+        train_in_db_sharded(g, w, x, y, 1, shards=2, plan_cache_=cache)
+        misses_after_first = cache.misses
+        g24, _, _, _ = _problem(n_rows=24)
+        x24 = RNG.randn(24, 6)
+        y24 = np.eye(3)[RNG.randint(0, 3, 24)]
+        train_in_db_sharded(g24, w, x24, y24, 1, shards=4,
+                            plan_cache_=cache)
+        assert cache.misses == misses_after_first
